@@ -1,0 +1,32 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Sequence
+
+RESULTS_DIR = Path(__file__).parent / "results"
+
+
+def write_result(name: str, payload: Any) -> Path:
+    RESULTS_DIR.mkdir(exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=str))
+    return path
+
+
+def fmt_table(rows: Sequence[dict], cols: Sequence[str], title: str = "") -> str:
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4f}" if abs(v) < 100 else f"{v:.1f}"
+        return str(v)
+
+    widths = {c: max(len(c), *(len(fmt(r.get(c, ""))) for r in rows)) for c in cols}
+    out = []
+    if title:
+        out.append(f"== {title} ==")
+    out.append(" | ".join(c.rjust(widths[c]) for c in cols))
+    out.append("-+-".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append(" | ".join(fmt(r.get(c, "")).rjust(widths[c]) for c in cols))
+    return "\n".join(out)

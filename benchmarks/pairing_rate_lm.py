@@ -1,0 +1,59 @@
+"""Beyond-paper: subtractor-pairing rates across the ten assigned LM archs.
+
+For each architecture (reduced config — the pairing rate is a property of
+the weight *distribution*, which the reduced configs share with their full
+siblings), applies the paper's per-column pairing to every weight matrix and
+reports the pair fraction + modeled ASIC power/area savings, plus the
+structured (TPU) pairing rate.
+
+This answers: "how much of the paper's LeNet-5 result carries over to a
+modern LM?" — which no table in the paper covers.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.transform import pair_model_params
+from repro.models import lm as M
+from repro.models.param import unzip
+
+from benchmarks.common import fmt_table, write_result
+
+ROUNDING_REL = 0.25  # rounding as a fraction of per-leaf weight std
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    archs = ALL_ARCHS if not quick else ALL_ARCHS[:3]
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+        # per-leaf relative rounding (see EXPERIMENTS.md — fixed absolute
+        # rounding is scale-sensitive; relative rounding is our extension)
+        stds = [float(np.std(np.asarray(l))) for l in jax.tree.leaves(params)]
+        r_abs = ROUNDING_REL * float(np.median([s for s in stds if s > 0]))
+
+        paired, rep = pair_model_params(params, r_abs, min_dim=4)
+        s = rep.savings()
+        _, rep_s = pair_model_params(params, r_abs, mode="structured", min_dim=4)
+        rows.append(
+            {
+                "arch": arch,
+                "weights": rep.total_weights,
+                "pair_frac_%": 100 * rep.pair_fraction,
+                "power_saving_%": 100 * s["power_saving"],
+                "area_saving_%": 100 * s["area_saving"],
+                "structured_frac_%": 100 * rep_s.pair_fraction,
+            }
+        )
+    out = {"rounding_rel": ROUNDING_REL, "rows": rows}
+    print(fmt_table(rows, list(rows[0].keys()),
+                    f"Subtractor pairing on LM archs (relative rounding {ROUNDING_REL}·std)"))
+    write_result("pairing_rate_lm", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Roofline assembly: reads the dry-run JSONs and produces the §Roofline
+table — the three terms (compute / memory / collective, seconds per step,
+per chip), the dominant bound, and the useful-compute ratio, for every
+(arch × shape) on the single-pod mesh (per the task spec; multi-pod cells
+prove the pod axis shards and are listed in §Dry-run).
+
+    PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.cost_model import TPU_V5E
+
+from benchmarks.common import fmt_table, write_result
+
+DRYRUN_DIR = Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16", tag: str = "") -> list[dict]:
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}{'__' + tag if tag else ''}.json")):
+        d = json.loads(p.read_text())
+        if tag == "" and d.get("cell", "").count("__") > 2:
+            continue  # skip tagged (perf-experiment) results in the baseline table
+        cells.append(d)
+    return cells
+
+
+def roofline_row(d: dict) -> dict:
+    if d.get("status") == "skipped":
+        return {
+            "arch": d["cell"].split("__")[0],
+            "shape": d["cell"].split("__")[1],
+            "bound": "skipped",
+            "note": d["reason"][:40],
+        }
+    if d.get("status") != "ok":
+        return {
+            "arch": d["cell"].split("__")[0],
+            "shape": d["cell"].split("__")[1],
+            "bound": "FAILED",
+            "note": d.get("error", "")[:40],
+        }
+    terms = TPU_V5E.terms(
+        d["cost"]["flops"], d["cost"]["bytes_accessed"], d["collectives"]["total_bytes"]
+    )
+    return {
+        "arch": d["arch"],
+        "shape": d["shape"],
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+        "t_collective_s": terms["t_collective_s"],
+        "bound": terms["bound"],
+        "useful": d["model"].get("useful_flops_ratio", 0.0),
+        "hbm_GiB": d["memory"]["peak_device_bytes"] / 2**30,
+        "fits": "Y" if d["memory"]["peak_device_bytes"] < 16 * 2**30 else "OVER",
+    }
+
+
+def run(quick: bool = False) -> dict:
+    cells = load_cells()
+    if not cells:
+        print("[roofline] no dry-run results found — run repro.launch.dryrun first")
+        return {"rows": []}
+    rows = [roofline_row(d) for d in cells]
+    cols = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+            "bound", "useful", "hbm_GiB", "fits"]
+    print(fmt_table(rows, cols, "Roofline (single-pod 16x16, per chip per step)"))
+    n_over = sum(1 for r in rows if r.get("fits") == "OVER")
+    n_fail = sum(1 for r in rows if r.get("bound") == "FAILED")
+    print(f"[roofline] {len(rows)} cells; {n_fail} failed; {n_over} over-HBM")
+    out = {"rows": rows}
+    write_result("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure + the beyond-paper
+and roofline benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Order: the LeNet benches reproduce the paper's own artifacts (Table I,
+Fig. 8 incl. Fig. 3/4 weight-distribution stats); pairing_rate_lm extends
+the technique to the ten assigned architectures; roofline assembles the
+dry-run results (run `python -m repro.launch.dryrun` first for fresh cells).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import fig8, pairing_rate_lm, roofline, table1
+
+BENCHES = [
+    ("table1 (paper Table I)", table1.run),
+    ("fig8 (paper Fig. 8 + Fig. 3/4)", fig8.run),
+    ("pairing_rate_lm (beyond paper)", pairing_rate_lm.run),
+    ("roofline (dry-run analysis)", roofline.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    for name, fn in BENCHES:
+        print(f"\n{'='*70}\n== {name}\n{'='*70}")
+        t0 = time.time()
+        try:
+            results[name] = fn(quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+            results[name] = {"error": str(e)}
+    n_fail = sum(1 for v in results.values() if "error" in v)
+    print(f"\n[benchmarks] {len(BENCHES) - n_fail}/{len(BENCHES)} benches succeeded")
+
+
+if __name__ == "__main__":
+    main()

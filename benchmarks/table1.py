@@ -1,0 +1,65 @@
+"""Table I reproduction: add/sub/mult counts vs rounding size for LeNet-5.
+
+The paper counts the three convolutional layers only (their baseline of
+405 600 multiplications = 117 600 + 240 000 + 48 000 MACs), pairing weights
+*within each filter*.  We run the same accounting on our trained LeNet-5 and
+print our ledger next to the paper's published one.  Counts differ in detail
+(they depend on the trained weight values) but must match on structure:
+adds == mults, adds + subs == 405 600, subs monotone in rounding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import paper_table1
+from repro.core.pairing import sweep_rounding
+from repro.models.lenet import LENET_CONV_SHAPES
+from repro.train.lenet_trainer import get_trained_lenet
+
+from benchmarks.common import fmt_table, write_result
+
+ROUNDINGS = [0.0, 0.0001, 0.005, 0.01, 0.015, 0.02, 0.025, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3]
+
+
+def run(quick: bool = False) -> dict:
+    params, _, _, info = get_trained_lenet(verbose=False)
+
+    weights, positions = [], []
+    for name, (shape, pos) in LENET_CONV_SHAPES.items():
+        k = np.asarray(params[name]["w"], dtype=np.float64)
+        H, W, Cin, Cout = k.shape
+        weights.append(k.reshape(H * W * Cin, Cout))
+        positions.append(pos)
+
+    roundings = ROUNDINGS if not quick else [0.0, 0.01, 0.05, 0.3]
+    ours = sweep_rounding(weights, positions, roundings)
+    paper = {row["rounding"]: row for row in paper_table1()}
+
+    rows = []
+    for r in ours:
+        p = paper.get(r["rounding"], {})
+        rows.append(
+            {
+                "rounding": r["rounding"],
+                "adds": r["adds"],
+                "subs": r["subs"],
+                "mults": r["mults"],
+                "total": r["total"],
+                "paper_subs": p.get("subs", "-"),
+                "paper_total": p.get("total", "-"),
+            }
+        )
+
+    # structural invariants of Table I
+    for r in ours:
+        assert r["adds"] == r["mults"]
+        assert r["adds"] + r["subs"] == 405600, (r, "baseline MACs must be 405600")
+
+    out = {"rows": rows, "train_info": info}
+    print(fmt_table(rows, list(rows[0].keys()), "Table I: op counts vs rounding (ours vs paper)"))
+    write_result("table1", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,18 @@
+"""End-to-end paper reproduction: train LeNet-5, pair its weights, and
+reproduce the paper's power/area/accuracy trade-off (Table I + Fig. 8).
+
+Run:  PYTHONPATH=src python examples/lenet_mnist.py [--epochs 3]
+"""
+import argparse
+
+from benchmarks.fig8 import run as run_fig8
+from benchmarks.table1 import run as run_table1
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("=== Table I: op counts (ours vs paper) ===")
+    run_table1(quick=args.quick)
+    print("\n=== Fig. 8: power/area/accuracy trade-off ===")
+    run_fig8(quick=args.quick)

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+Takes a weight matrix, runs the paper's Algorithm-1 pairing at a few
+rounding sizes, prints the op-count ledger + modeled ASIC savings, and shows
+the TPU-native structured variant evaluating through the Pallas kernel.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import AsicCostModel, OpCounts
+from repro.core.pairing import fold_columns, pair_columns, pair_rows_structured
+from repro.kernels.ops import apply_structured_pairing
+
+rng = np.random.default_rng(0)
+W = rng.normal(size=(512, 256)) * 0.08  # a layer's weights (K=512 in, N=256 out)
+x = jnp.asarray(rng.normal(size=(4, 512)), jnp.float32)
+model = AsicCostModel()
+base = OpCounts(mults=W.size, adds=W.size, subs=0)
+
+print("rounding |  pairs | weight-err |  power-saving |  area-saving")
+for r in [0.001, 0.005, 0.02, 0.05]:
+    cp = pair_columns(W, r)
+    Wf = fold_columns(W, cp)
+    new = OpCounts(W.size - cp.total_pairs, W.size - cp.total_pairs, cp.total_pairs)
+    print(
+        f"  {r:6.3f} | {cp.total_pairs:6d} | {np.abs(Wf - W).max():10.5f} | "
+        f"{100 * model.power_saving(base, new):12.2f}% | {100 * model.area_saving(base, new):11.2f}%"
+    )
+
+# exactness of eq.(1): folded dense matmul == subtractor dataflow
+cp = pair_columns(W, 0.02)
+y_folded = x @ jnp.asarray(fold_columns(W, cp), jnp.float32)
+
+# TPU-native structured pairing through the fused Pallas kernel.
+# Structured pairing needs *row-level* antisymmetry (shared across outputs);
+# iid-random weights have none, so build a matrix with that structure the way
+# trained networks often do (negated feature detectors + noise).
+Ws = np.concatenate([W[:256], -W[:256] + rng.normal(size=(256, 256)) * 0.002])
+sp = pair_rows_structured(Ws, rounding=0.01)
+y_kernel = apply_structured_pairing(x, sp)
+y_exact = x @ jnp.asarray(Ws, jnp.float32)
+print(f"\nstructured pairing: {sp.n_pairs} shared pairs "
+      f"→ MXU contraction {Ws.shape[0]} → {Ws.shape[0] - sp.n_pairs} lanes "
+      f"({100 * sp.n_pairs / Ws.shape[0]:.0f}% fewer)")
+print(f"kernel vs exact matmul max err: {float(jnp.abs(y_kernel - y_exact).max()):.5f} "
+      f"(bounded by rounding)")

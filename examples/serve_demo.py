@@ -1,0 +1,49 @@
+"""Batched serving demo with the paper's technique applied to the weights.
+
+Loads a small LM (random-init for the demo), applies subtractor pairing at a
+chosen rounding, and serves batched greedy generations from the KV-cache
+engine — demonstrating that the paired (folded) weights are a drop-in
+replacement at inference time, exactly as the paper deploys them.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py [--rounding 0.01]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.transform import pair_model_params
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.serving.engine import ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-1.5b")
+ap.add_argument("--rounding", type=float, default=0.01)
+ap.add_argument("--steps", type=int, default=12)
+args = ap.parse_args()
+
+cfg = get_smoke_config(args.arch)
+params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+
+paired, report = pair_model_params(params, args.rounding, min_dim=4)
+s = report.savings()
+print(f"[serve] paired {report.total_pairs} pairs "
+      f"({100 * report.pair_fraction:.1f}% of weights) at rounding {args.rounding} "
+      f"→ modeled power saving {100 * s['power_saving']:.1f}%, "
+      f"area saving {100 * s['area_saving']:.1f}%")
+
+knobs = M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none")
+rng = np.random.default_rng(0)
+prompts = {i: rng.integers(0, cfg.vocab, size=(6 + 3 * i,)).astype(np.int32) for i in range(2)}
+
+base = ServeEngine(cfg, params, max_seq=64, batch_size=2, knobs=knobs)
+pair = ServeEngine(cfg, paired, max_seq=64, batch_size=2, knobs=knobs)
+out_base = base.generate(dict(prompts), args.steps)
+out_pair = pair.generate(dict(prompts), args.steps)
+
+for slot in prompts:
+    agree = sum(a == b for a, b in zip(out_base[slot], out_pair[slot]))
+    print(f"slot {slot}: original {out_base[slot]}")
+    print(f"        paired   {out_pair[slot]}  ({agree}/{args.steps} tokens agree)")

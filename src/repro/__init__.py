@@ -1,0 +1,22 @@
+"""repro: JAX framework for subtractor-based inference acceleration.
+
+Reproduces and extends "Subtractor-Based CNN Inference Accelerator"
+(Gao, Hammad, El-Sankary, Gu — 2023): replacing one multiplication and one
+addition with a single subtraction by pairing opposite-sign weights of equal
+(rounded) magnitude, trading a controllable amount of accuracy for power/area.
+
+Package layout
+--------------
+core/      the paper's contribution: weight pairing (Alg. 1), ASIC cost model,
+           structured (TPU-native) pairing, model-level transform pass
+models/    LeNet-5 (the paper's network) + the 10 assigned LM-family archs
+data/      MNIST (with deterministic synthetic fallback) + LM token pipeline
+train/     pure-JAX AdamW, train loop, fault-tolerant checkpointing
+serving/   KV-cache decode engine
+parallel/  mesh / sharding rules (DP / FSDP / TP / EP / pod)
+kernels/   Pallas TPU kernels (paired matmul) + jnp oracles
+configs/   one config per assigned architecture
+launch/    mesh.py, dryrun.py (multi-pod compile-only dry-run), train.py, serve.py
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,39 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(name)`` resolves any of the ten assigned architectures (plus
+``lenet5`` for the paper's own network); ``ALL_ARCHS`` lists them.
+"""
+from __future__ import annotations
+
+import importlib
+
+ALL_ARCHS = [
+    "qwen2-1.5b",
+    "mistral-large-123b",
+    "granite-3-2b",
+    "qwen3-4b",
+    "whisper-base",
+    "internvl2-2b",
+    "mamba2-2.7b",
+    "deepseek-v2-lite-16b",
+    "olmoe-1b-7b",
+    "hymba-1.5b",
+]
+
+_MODULES = {name: name.replace("-", "_").replace(".", "p") for name in ALL_ARCHS}
+
+
+def get_config(name: str):
+    """Full-size config for an assigned architecture."""
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.config()
+
+
+def get_smoke_config(name: str):
+    """Reduced config of the same family for CPU smoke tests."""
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.smoke_config()

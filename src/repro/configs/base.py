@@ -1,0 +1,218 @@
+"""ModelConfig: a single declarative description covering all ten assigned
+architecture families (dense / MoE / SSM / hybrid / enc-dec / VLM).
+
+The decoder stack is expressed as *segments* — maximal runs of identical
+layers — so each segment lowers to one ``lax.scan`` over stacked parameters
+(compile time stays flat in depth) while still allowing per-layer
+heterogeneity (DeepSeek's first dense layer, Hymba's three full-attention
+layers, …).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int = 64
+    top_k: int = 6
+    d_ff_expert: int = 1408
+    n_shared: int = 2
+    first_k_dense: int = 0  # leading layers with a dense FFN instead of MoE
+    d_ff_dense: int = 0  # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmConfig:
+    """Mamba-2 (SSD) block geometry."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2  # d_inner = expand * d_model
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256  # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style audio encoder. The conv frontend is a stub: inputs are
+    precomputed frame embeddings (B, frames, d_model), per the task spec."""
+
+    n_layers: int = 6
+    frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 → d_model // n_heads
+
+    # attention flavour
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0  # 0 → full attention
+    full_attn_layers: tuple[int, ...] = ()  # hybrid: layers using full attn
+    rope_theta: float = 10000.0
+
+    mla: MlaConfig | None = None
+    moe: MoeConfig | None = None
+    ssm: SsmConfig | None = None
+    encoder: EncoderConfig | None = None
+
+    # hybrid (hymba): every layer runs attention ∥ SSM heads in parallel
+    meta_tokens: int = 0
+
+    # vlm (internvl2): first `vision_prefix` positions take precomputed patch
+    # embeddings instead of token embeddings (frontend stub per task spec)
+    vision_prefix: int = 0
+    vision_embed_dim: int = 1024  # dim of the (stub) precomputed patch embeds
+
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    act: Literal["silu", "gelu"] = "silu"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def attention_kind(self) -> str:
+        if self.family == "ssm":
+            return "none"
+        if self.mla is not None:
+            return "mla"
+        return "gqa"
+
+    def layer_kind(self, i: int) -> str:
+        """Kind string for decoder layer i."""
+        if self.family == "ssm":
+            return "ssm"
+        if self.family == "hybrid":
+            return "hybrid_full" if i in self.full_attn_layers else "hybrid_swa"
+        if self.moe is not None:
+            return "dense" if i < self.moe.first_k_dense else "moe"
+        return "dense"
+
+    def segments(self) -> tuple[tuple[str, int], ...]:
+        """Maximal runs of identical layer kinds — one lax.scan each."""
+        segs: list[tuple[str, int]] = []
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            if segs and segs[-1][0] == kind:
+                segs[-1] = (kind, segs[-1][1] + 1)
+            else:
+                segs.append((kind, 1))
+        return tuple(segs)
+
+    # -- parameter / FLOP bookkeeping (for roofline "useful compute") -------
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count (embeddings included once)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab
+        hd = self.head_dim
+        n = 0
+        n += V * d  # embed
+        if not self.tie_embeddings:
+            n += V * d  # lm head
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            # attention
+            if self.family == "ssm":
+                att = 0
+            elif self.mla is not None:
+                m = self.mla
+                att = (
+                    d * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)  # W_q
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)  # W_dkv + W_kr
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d  # W_o
+                )
+            else:
+                att = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            # mlp
+            if kind == "moe":
+                mo = self.moe
+                per_expert = 3 * d * mo.d_ff_expert
+                total_e = mo.n_experts * per_expert + mo.n_shared * per_expert + d * mo.n_experts
+                active_e = (mo.top_k + mo.n_shared) * per_expert + d * mo.n_experts
+                mlp = active_e if active_only else total_e
+            elif kind == "dense" and self.moe is not None and i < self.moe.first_k_dense:
+                mlp = 3 * d * self.moe.d_ff_dense
+            elif kind in ("ssm", "hybrid_full", "hybrid_swa"):
+                mlp = 3 * d * ff if ff else 0
+            else:
+                mlp = 3 * d * ff
+            # ssm head params
+            ssm = 0
+            if kind in ("ssm", "hybrid_full", "hybrid_swa"):
+                s = self.ssm
+                d_in = s.expand * d
+                ssm = (
+                    d * (2 * d_in + 2 * s.n_groups * s.d_state + d_in // s.head_dim)
+                    + d_in * d
+                )
+            n += att + mlp + ssm
+        return n
+
+    def flops_per_token(self, training: bool = True) -> float:
+        """6·N_active (train) or 2·N_active (decode) matmul FLOPs/token."""
+        n = self.param_count(active_only=True)
+        return (6.0 if training else 2.0) * n
+
+
+# The four assigned input shapes (identical for every LM-family arch).
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """The mandated skips: long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k":
+        if cfg.family == "ssm":
+            return True, "ssm: O(1) state decode"
+        if cfg.family == "hybrid":
+            return True, "hybrid: sliding-window attn + ssm state"
+        return (
+            False,
+            "full quadratic attention at 524k context — skipped per task spec "
+            "(noted in DESIGN.md)",
+        )
+    return True, ""

@@ -1,0 +1,24 @@
+"""Core: the paper's contribution — subtractor weight pairing + cost model."""
+
+from repro.core.pairing import (  # noqa: F401
+    PairingResult,
+    ColumnPairing,
+    StructuredPairing,
+    pair_list_twopointer,
+    pair_columns,
+    fold_columns,
+    pair_rows_structured,
+    pairing_op_counts,
+    column_pairing_for_conv,
+    sweep_rounding,
+)
+from repro.core.cost_model import (  # noqa: F401
+    AsicCostModel,
+    TpuRoofline,
+    TPU_V5E,
+    OpCounts,
+)
+from repro.core.transform import (  # noqa: F401
+    pair_model_params,
+    PairedModelReport,
+)

@@ -1,0 +1,154 @@
+"""Model-level pairing pass: apply the paper's preprocessing to a whole model.
+
+This is the framework integration of the paper's "weight preprocessor" block
+(Fig. 5): it walks a parameter pytree, finds every eligible weight
+contraction, runs the pairing, and returns
+
+* the *paired-equivalent* parameters (``fold``ed weights — a drop-in
+  replacement; the forward pass is unchanged and bit-identical to the
+  subtractor dataflow), and
+* a :class:`PairedModelReport` with per-leaf pair counts, the Table-I style
+  op ledger, and the modeled ASIC power/area savings.
+
+For the TPU fast path (structured pairing + Pallas kernel) use
+``mode="structured"``; the report then also carries the per-leaf
+:class:`StructuredPairing` objects that `kernels/ops.py` consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.cost_model import AsicCostModel, OpCounts
+from repro.core.pairing import (
+    ColumnPairing,
+    StructuredPairing,
+    fold_columns,
+    pair_columns,
+    pair_rows_structured,
+)
+
+
+@dataclasses.dataclass
+class LeafReport:
+    path: str
+    shape: tuple[int, ...]
+    n_weights: int
+    n_pairs: int
+    pair_fraction: float  # fraction of weights absorbed into pairs (2P/K·N)
+    pairing: ColumnPairing | StructuredPairing | None = None
+
+
+@dataclasses.dataclass
+class PairedModelReport:
+    rounding: float
+    mode: str
+    leaves: list[LeafReport]
+
+    @property
+    def total_weights(self) -> int:
+        return sum(l.n_weights for l in self.leaves)
+
+    @property
+    def total_pairs(self) -> int:
+        return sum(l.n_pairs for l in self.leaves)
+
+    @property
+    def pair_fraction(self) -> float:
+        tw = self.total_weights
+        return 2.0 * self.total_pairs / tw if tw else 0.0
+
+    def op_counts(self) -> OpCounts:
+        """Whole-model op ledger (positions=1: one application per weight,
+        i.e. GEMM accounting; conv positions are handled by the LeNet bench)."""
+        base = self.total_weights
+        subs = self.total_pairs
+        return OpCounts(mults=base - subs, adds=base - subs, subs=subs)
+
+    def baseline_op_counts(self) -> OpCounts:
+        return OpCounts(mults=self.total_weights, adds=self.total_weights, subs=0)
+
+    def savings(self, model: AsicCostModel | None = None) -> dict[str, float]:
+        m = model or AsicCostModel()
+        return {
+            "power_saving": m.power_saving(self.baseline_op_counts(), self.op_counts()),
+            "area_saving": m.area_saving(self.baseline_op_counts(), self.op_counts()),
+            "pair_fraction": self.pair_fraction,
+        }
+
+
+def _path_str(path: Any) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def pair_model_params(
+    params: Any,
+    rounding: float,
+    *,
+    mode: str = "per_column",
+    min_dim: int = 8,
+    predicate: Callable[[str, np.ndarray], bool] | None = None,
+    keep_pairings: bool = False,
+) -> tuple[Any, PairedModelReport]:
+    """Pair every eligible weight leaf of ``params``.
+
+    Eligible = float array, ndim in (2, 4), both contraction dims >= min_dim,
+    and ``predicate(path, leaf)`` (if given) returns True.  4-D leaves are
+    treated as conv kernels (H, W, Cin, Cout) and paired per filter, exactly
+    as the paper does for LeNet-5; 2-D leaves (K, N) are paired per column
+    (= per output neuron).
+
+    Returns (paired_params, report).  ``paired_params`` has the same treedef;
+    only eligible leaves are replaced by their folded equivalents.
+    """
+    leaves_report: list[LeafReport] = []
+
+    def handle(path, leaf):
+        if not isinstance(leaf, (np.ndarray, jax.Array)):
+            return leaf
+        arr = np.asarray(leaf)
+        if arr.dtype.kind != "f" or arr.ndim not in (2, 4):
+            return leaf
+        if arr.ndim == 4:
+            H, Wd, Cin, Cout = arr.shape
+            mat = arr.reshape(H * Wd * Cin, Cout)
+        else:
+            mat = arr
+        if mat.shape[0] < min_dim or mat.shape[1] < min_dim:
+            return leaf
+        pstr = _path_str(path)
+        if predicate is not None and not predicate(pstr, arr):
+            return leaf
+
+        mat64 = mat.astype(np.float64)
+        if mode == "per_column":
+            cp = pair_columns(mat64, rounding)
+            folded = fold_columns(mat64, cp)
+            n_pairs = cp.total_pairs
+            pairing: ColumnPairing | StructuredPairing = cp
+        elif mode == "structured":
+            sp = pair_rows_structured(mat64, rounding)
+            folded = sp.fold()
+            n_pairs = sp.n_pairs * mat.shape[1]  # one pair row spans N columns
+            pairing = sp
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+
+        leaves_report.append(
+            LeafReport(
+                path=pstr,
+                shape=tuple(arr.shape),
+                n_weights=int(mat.size),
+                n_pairs=int(n_pairs),
+                pair_fraction=2.0 * n_pairs / mat.size,
+                pairing=pairing if keep_pairings else None,
+            )
+        )
+        return folded.reshape(arr.shape).astype(arr.dtype)
+
+    paired = jax.tree_util.tree_map_with_path(handle, params)
+    report = PairedModelReport(rounding=rounding, mode=mode, leaves=leaves_report)
+    return paired, report

@@ -1,0 +1,4 @@
+"""Data pipelines: MNIST (real or synthetic fallback) + LM token streams."""
+
+from repro.data.mnist import load_mnist, synthetic_mnist  # noqa: F401
+from repro.data.tokens import token_batches  # noqa: F401

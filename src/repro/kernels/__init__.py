@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute of the paper.
+
+paired_matmul — the paper's "modified convolution unit" (Fig. 5) adapted to
+the TPU: the subtract-then-MAC dataflow as a fused VMEM-tiled GEMM with a
+reduced contraction dimension.  ops.py carries the jit'd public wrappers
+(kernel on TPU, interpret mode on CPU); ref.py the pure-jnp oracles.
+"""
+
+from repro.kernels.ops import paired_matmul, dense_matmul  # noqa: F401

@@ -1,0 +1,74 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a real TPU backend ``interpret=False`` compiles the Mosaic kernel; in this
+CPU container the kernels run (and are tested) in interpret mode.  The
+wrapper also owns the *deployment* plumbing: applying a
+:class:`repro.core.pairing.StructuredPairing` to activations, including the
+input permutation (which in production folds into the previous layer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pairing import StructuredPairing
+from repro.kernels.paired_matmul import dense_matmul_pallas, paired_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def paired_matmul(
+    x: jax.Array,
+    kmat: jax.Array,
+    w_res: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(…, K) @ paired weights → (…, N). x pre-permuted to [I|J|residual]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = paired_matmul_pallas(
+        x2, kmat, w_res, block_m=block_m, block_n=block_n, interpret=interp
+    )
+    return y.reshape(*lead, y.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def dense_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = dense_matmul_pallas(x2, w, block_m=block_m, block_n=block_n, interpret=interp)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def apply_structured_pairing(
+    x: jax.Array, sp: StructuredPairing, *, fold_perm: bool = False, **kw
+) -> jax.Array:
+    """Evaluate x @ W through the paired kernel given a StructuredPairing.
+
+    ``fold_perm=False`` applies the [I|J|residual] permutation here (one
+    gather); in production the permutation folds into the previous layer's
+    output weights and the gather disappears.
+    """
+    perm = jnp.asarray(sp.perm())
+    xp = x if fold_perm else jnp.take(x, perm, axis=-1)
+    kmat = jnp.asarray(sp.Kmat, dtype=x.dtype)
+    w_res = jnp.asarray(sp.W_res, dtype=x.dtype)
+    return paired_matmul(xp, kmat, w_res, **kw)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paired_matmul_ref(x: jax.Array, kmat: jax.Array, w_res: jax.Array) -> jax.Array:
+    """y = (x[:, :P] - x[:, P:2P]) @ Kmat + x[:, 2P:] @ W_res, fp32 accum.
+
+    The subtraction happens at *input* precision — that is the paper's
+    subtractor semantics (the hardware unit operates on the input format),
+    and what the Pallas kernel's VPU does — then the dot accumulates fp32.
+    """
+    P = kmat.shape[0]
+    diff = x[:, :P] - x[:, P : 2 * P]  # input-dtype subtract
+    y = diff.astype(jnp.float32) @ kmat.astype(jnp.float32)
+    y = y + x[:, 2 * P :].astype(jnp.float32) @ w_res.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def dense_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,75 @@
+"""Model inputs: concrete batches (smoke tests / examples) and
+ShapeDtypeStruct stand-ins (dry-run — weak-type-correct, shardable, no
+device allocation).
+
+Modality frontends are STUBS per the task spec: whisper gets precomputed
+frame embeddings, internvl2 gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_logical_axes(cfg: ModelConfig, kind: str) -> dict:
+    """Logical sharding axes for each batch entry (leading dim = batch)."""
+    ax: dict[str, Any] = {"tokens": ("batch", "seq")}
+    if kind == "train":
+        ax["labels"] = ("batch", "seq")
+    if cfg.vision_prefix:
+        ax["patches"] = ("batch", None, None)
+    if cfg.encoder is not None:
+        ax["frames"] = ("batch", None, None)
+    if kind == "decode":
+        ax = {"tokens": ("batch", None), "pos": ("batch",)}
+    return ax
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, kind: str) -> dict:
+    """ShapeDtypeStructs for one step's inputs (no allocation)."""
+    cdt = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.vision_prefix:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_prefix, cfg.vision_embed_dim), cdt
+        )
+    if cfg.encoder is not None:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.frames, cfg.d_model), cdt
+        )
+    return specs
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, kind: str = "train", seed: int = 0) -> dict:
+    """Concrete random batch matching batch_specs (for smoke tests)."""
+    rng = np.random.default_rng(seed)
+    cdt = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}
+    if kind == "train":
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+    if cfg.vision_prefix:
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vision_prefix, cfg.vision_embed_dim)), cdt
+        ) * 0.02
+    if cfg.encoder is not None:
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder.frames, cfg.d_model)), cdt
+        ) * 0.02
+    return out

@@ -1,0 +1,208 @@
+"""Step builders: the pjit'd train / prefill / serve step for any arch.
+
+Everything here works from *abstract* parameter trees (ShapeDtypeStructs via
+``abstract_init``) so the multi-pod dry-run can lower + compile the 123B
+configs without allocating a byte, and from concrete trees for real runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.inputs import batch_logical_axes, batch_specs
+from repro.launch.mesh import data_axes
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.parallel.rules import rules_for
+from repro.parallel.sharding import Rules, activate, shardings_for, spec_for_axes
+from repro.train.optimizer import Optimizer, adamw
+
+
+# ---------------------------------------------------------------------------
+# abstract init (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the model params."""
+    cap: dict = {}
+
+    def f(key):
+        tree = M.init_lm(cfg, key)
+        vals, axes = unzip(tree)
+        cap["axes"] = axes
+        return vals
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating)
+            else s,
+            shapes,
+        )
+    return shapes, cap["axes"]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    cap: dict = {}
+
+    def f():
+        tree = M.init_cache(cfg, batch, max_seq)
+        vals, axes = unzip(tree)
+        cap["axes"] = axes
+        return vals
+
+    shapes = jax.eval_shape(f)
+    return shapes, cap["axes"]
+
+
+def abstract_opt_state(opt: Optimizer, param_shapes):
+    return jax.eval_shape(opt.init, param_shapes)
+
+
+def opt_state_axes(param_axes, opt_state_shapes):
+    """Optimizer state shards exactly like its parameter (moments are
+    elementwise)."""
+
+    def like(sub):
+        if isinstance(sub, dict) and set(sub) >= {"m", "v"}:
+            return {k: param_axes for k in sub}
+        return {k: param_axes for k in sub}
+
+    return like(opt_state_shapes)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, opt: Optimizer, knobs: M.PerfKnobs, mesh, rules: Rules):
+    """Returns train_step(params, opt_state, step, batch) -> (params', opt', metrics)."""
+
+    def train_step(params, opt_state, step, batch):
+        with activate(mesh, rules):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: M.lm_loss(cfg, p, batch, knobs=knobs), has_aux=True
+            )(params)
+            new_params, new_opt = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, {**metrics, "loss": loss}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, knobs: M.PerfKnobs, mesh, rules: Rules):
+    def prefill_step(params, batch):
+        with activate(mesh, rules):
+            logits, cache = M.prefill(cfg, params, batch, knobs=knobs)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, mesh, rules: Rules):
+    def serve_step(params, cache, batch):
+        with activate(mesh, rules):
+            logits, new_cache = M.decode_step(
+                cfg, params, cache, batch["tokens"], batch["pos"]
+            )
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# fully-wired jit for one (arch × shape × mesh) cell
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    jitted: Any
+    arg_shapes: tuple
+    in_shardings: tuple
+    mode: str
+
+    def lower(self):
+        return self.jitted.lower(*self.arg_shapes)
+
+
+def wire_cell(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    seq_len: int,
+    global_batch: int,
+    mode: str,
+    knobs: M.PerfKnobs = M.DEFAULT_KNOBS,
+    rules: Rules | None = None,
+) -> LoweredCell:
+    """Build the jit'd step + abstract args + shardings for one dry-run cell."""
+    rules = rules or rules_for(cfg, mode, mesh)
+
+    def batch_shardings(kind, specs):
+        ax = batch_logical_axes(cfg, kind)
+        return {
+            k: jax.sharding.NamedSharding(
+                mesh,
+                spec_for_axes(v, mesh=mesh, rules=rules, dim_sizes=specs[k].shape),
+            )
+            for k, v in ax.items()
+        }
+
+    if mode == "train":
+        param_shapes, param_axes = abstract_params(cfg)
+        opt = adamw(1e-4, weight_decay=0.1)
+        opt_shapes = abstract_opt_state(opt, param_shapes)
+        p_shard = shardings_for(param_axes, mesh, rules, param_shapes)
+        o_shard = jax.tree.map(
+            lambda s: s,  # placeholder; replaced below by zipped map
+            opt_shapes,
+        )
+        # optimizer moments shard like their params
+        o_shard = {k: p_shard for k in opt_shapes}
+        step_fn = build_train_step(cfg, opt, knobs, mesh, rules)
+        bspecs = batch_specs(cfg, global_batch, seq_len, "train")
+        bshard = batch_shardings("train", bspecs)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, None, bshard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (param_shapes, opt_shapes, jax.ShapeDtypeStruct((), jnp.int32), bspecs)
+        return LoweredCell(jitted, args, (p_shard, o_shard, None, bshard), mode)
+
+    if mode == "prefill":
+        param_shapes, param_axes = abstract_params(cfg, dtype=jnp.dtype(cfg.dtype))
+        p_shard = shardings_for(param_axes, mesh, rules, param_shapes)
+        step_fn = build_prefill_step(cfg, knobs, mesh, rules)
+        bspecs = batch_specs(cfg, global_batch, seq_len, "prefill")
+        bshard = batch_shardings("prefill", bspecs)
+        jitted = jax.jit(step_fn, in_shardings=(p_shard, bshard))
+        args = (param_shapes, bspecs)
+        return LoweredCell(jitted, args, (p_shard, bshard), mode)
+
+    if mode == "decode":
+        param_shapes, param_axes = abstract_params(cfg, dtype=jnp.dtype(cfg.dtype))
+        p_shard = shardings_for(param_axes, mesh, rules, param_shapes)
+        cache_shapes, cache_axes = abstract_cache(cfg, global_batch, seq_len)
+        c_shard = shardings_for(cache_axes, mesh, rules, cache_shapes)
+        step_fn = build_serve_step(cfg, mesh, rules)
+        bspecs = batch_specs(cfg, global_batch, seq_len, "decode")
+        bshard = batch_shardings("decode", bspecs)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, c_shard, bshard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        args = (param_shapes, cache_shapes, bspecs)
+        return LoweredCell(jitted, args, (p_shard, c_shard, bshard), mode)
+
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,3 @@
+"""Model zoo: LeNet-5 (the paper's network) + the assigned LM-family archs."""
+
+from repro.models.lenet import init_lenet, lenet_apply, LENET_CONV_POSITIONS  # noqa: F401

@@ -1,0 +1,94 @@
+"""LeNet-5, exactly the architecture of the paper's Fig. 2.
+
+32x32x1 input → C1 conv 5x5x6 → pool → C3 conv 5x5x16 → pool →
+C5 conv 5x5x120 (1x1 spatial) → F6 dense 84 → output dense 10 (softmax).
+
+Conv MAC counts (valid padding, stride 1) reproduce the paper's Table-I
+baseline of 405 600 multiplications:
+
+    C1: 28·28·6·(5·5·1)   = 117 600
+    C3: 10·10·16·(5·5·6)  = 240 000
+    C5:  1·1·120·(5·5·16) =  48 000
+                    total = 405 600
+
+Pure-JAX functional implementation (params = pytree of numpy/jax arrays).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# (output spatial positions, kernel shape) per conv layer — used by Table I.
+LENET_CONV_SHAPES = {
+    "conv1": ((5, 5, 1, 6), 28 * 28),
+    "conv2": ((5, 5, 6, 16), 10 * 10),
+    "conv3": ((5, 5, 16, 120), 1 * 1),
+}
+LENET_CONV_POSITIONS = {k: pos for k, (_, pos) in LENET_CONV_SHAPES.items()}
+
+
+def init_lenet(key: jax.Array, dtype=jnp.float32) -> dict:
+    """He-initialised LeNet-5 parameters."""
+    keys = jax.random.split(key, 5)
+
+    def conv_init(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return (jax.random.normal(k, shape, dtype) * np.sqrt(2.0 / fan_in))
+
+    def dense_init(k, shape):
+        return jax.random.normal(k, shape, dtype) * np.sqrt(2.0 / shape[0])
+
+    return {
+        "conv1": {"w": conv_init(keys[0], (5, 5, 1, 6)), "b": jnp.zeros((6,), dtype)},
+        "conv2": {"w": conv_init(keys[1], (5, 5, 6, 16)), "b": jnp.zeros((16,), dtype)},
+        "conv3": {"w": conv_init(keys[2], (5, 5, 16, 120)), "b": jnp.zeros((120,), dtype)},
+        "fc1": {"w": dense_init(keys[3], (120, 84)), "b": jnp.zeros((84,), dtype)},
+        "fc2": {"w": dense_init(keys[4], (84, 10)), "b": jnp.zeros((10,), dtype)},
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def lenet_apply(params: dict, x: jax.Array) -> jax.Array:
+    """Forward pass: x (N, 32, 32, 1) → logits (N, 10)."""
+    x = jax.nn.relu(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))  # 28
+    x = _maxpool2(x)  # 14
+    x = jax.nn.relu(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))  # 10
+    x = _maxpool2(x)  # 5
+    x = jax.nn.relu(_conv(x, params["conv3"]["w"], params["conv3"]["b"]))  # 1
+    x = x.reshape(x.shape[0], -1)  # (N, 120)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def lenet_loss(params: dict, images: jax.Array, labels: jax.Array):
+    logits = lenet_apply(params, images)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (jnp.argmax(logits, axis=-1) == labels).mean()
+    return loss, acc
+
+
+def lenet_accuracy(params: dict, images, labels, batch: int = 512) -> float:
+    """Full-dataset accuracy, batched to bound memory."""
+    hits = 0
+    apply = jax.jit(lenet_apply)
+    for i in range(0, images.shape[0], batch):
+        logits = apply(params, jnp.asarray(images[i : i + batch]))
+        hits += int((jnp.argmax(logits, -1) == jnp.asarray(labels[i : i + batch])).sum())
+    return hits / images.shape[0]

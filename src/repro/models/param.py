@@ -1,0 +1,52 @@
+"""Parameters annotated with logical sharding axes.
+
+Model init functions build trees whose leaves are ``Param(value, axes)``;
+``unzip`` splits that into a plain value tree (used by forward / optimizer)
+and an axes tree (used by parallel/sharding.py to build NamedShardings).
+The axes names are *logical* ("embed", "ff", "q_heads", "experts", …);
+per-(arch, mode) rule tables map them onto mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any  # array or ShapeDtypeStruct
+    axes: tuple[str | None, ...]
+
+    def __post_init__(self):
+        shape = getattr(self.value, "shape", None)
+        if shape is not None and len(shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {shape}")
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree: Any) -> tuple[Any, Any]:
+    """Split a Param tree into (values, axes) with identical treedefs."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_params(trees: list[Any]) -> Any:
+    """Stack a list of identical Param trees along a new leading "layers" axis
+    (for lax.scan over a segment of identical layers)."""
+    import jax.numpy as jnp
+
+    def stack(*leaves: Param) -> Param:
+        vals = [l.value for l in leaves]
+        if isinstance(vals[0], jax.ShapeDtypeStruct):
+            v = jax.ShapeDtypeStruct((len(vals),) + tuple(vals[0].shape), vals[0].dtype)
+        else:
+            v = jnp.stack(vals)
+        return Param(v, ("layers",) + leaves[0].axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=is_param)

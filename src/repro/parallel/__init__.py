@@ -1,0 +1,10 @@
+"""Distribution: logical-axis sharding rules, mesh plumbing, collectives."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    Rules,
+    activate,
+    constrain,
+    current_mesh,
+    shardings_for,
+    spec_for_axes,
+)

@@ -1,0 +1,167 @@
+"""Logical-axis sharding: the single place where "what shards where" lives.
+
+Models annotate every parameter with *logical* axes ("embed", "ff",
+"experts", …) and call :func:`constrain` on key activations with logical
+names ("batch", "ff", "experts").  A :class:`Rules` table maps logical axes
+to mesh axes per (architecture × mode); :func:`activate` installs
+(mesh, rules) for a region of code, and everything else — NamedShardings for
+pjit, with_sharding_constraint on activations — derives from that.
+
+Why logical indirection (and not hard-coded PartitionSpecs): elasticity.
+When the fleet loses a pod or the mesh is re-shaped, the launcher re-activates
+the same rules on the new mesh and every sharding follows; nothing in the
+model knows mesh sizes.  Rules also guard divisibility: a logical axis whose
+dimension does not divide its mesh axes falls back to replication instead of
+producing an invalid sharding (e.g. qwen2's 12 query heads on a 16-way model
+axis).
+
+One mesh axis is never used twice in a spec: axes are resolved in priority
+order and later claims on an already-used mesh axis degrade to None.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Resolution priority: earlier names win a contested mesh axis.
+PRIORITY = [
+    "experts",
+    "vocab",
+    "ff",
+    "expert_ff",
+    "q_heads",
+    "kv_heads",
+    "ssm_heads",
+    "ssm_in",
+    "cache_seq",
+    "batch",
+    "embed",
+    "kv_lora",
+    "ssm_state",
+    "head_dim",
+    "frames",
+    "meta",
+    "conv",
+    "layers",
+    "seq",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Mapping logical axis -> mesh axis (str), tuple of mesh axes, or None."""
+
+    table: Mapping[str, Any]
+
+    def mesh_axes(self, name: str | None):
+        if name is None:
+            return None
+        return self.table.get(name)
+
+
+_state = threading.local()
+
+
+def current() -> tuple[Mesh | None, Rules | None]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Rules):
+    """Install (mesh, rules) for constrain()/spec_for_axes() in this thread."""
+    prev = current()
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for_axes(
+    axes: Sequence[str | None],
+    *,
+    mesh: Mesh | None = None,
+    rules: Rules | None = None,
+    dim_sizes: Sequence[int] | None = None,
+) -> P:
+    """PartitionSpec for a tuple of logical axis names.
+
+    Guards: (a) each mesh axis used at most once (priority order),
+    (b) divisibility — if ``dim_sizes`` given, a dim that does not divide its
+    mesh axes is replicated instead.
+    """
+    if mesh is None or rules is None:
+        m, r = current()
+        mesh = mesh or m
+        rules = rules or r
+    if mesh is None or rules is None:
+        return P(*([None] * len(axes)))
+
+    order = sorted(
+        range(len(axes)),
+        key=lambda i: PRIORITY.index(axes[i]) if axes[i] in PRIORITY else len(PRIORITY),
+    )
+    used: set[str] = set()
+    out: list[Any] = [None] * len(axes)
+    for i in order:
+        cand = rules.mesh_axes(axes[i])
+        if cand is None:
+            continue
+        cand_t = (cand,) if isinstance(cand, str) else tuple(cand)
+        if any(c in used for c in cand_t):
+            continue
+        if dim_sizes is not None:
+            size = dim_sizes[i]
+            if size % _axis_size(mesh, cand_t) != 0:
+                continue
+        used.update(cand_t)
+        out[i] = cand if isinstance(cand, str) else tuple(cand_t)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside activate()."""
+    mesh, rules = current()
+    if mesh is None or rules is None:
+        return x
+    spec = spec_for_axes(axes, mesh=mesh, rules=rules, dim_sizes=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shardings_for(axes_tree: Any, mesh: Mesh, rules: Rules, shapes_tree: Any = None) -> Any:
+    """NamedSharding tree for a tree of logical-axes tuples (see param.unzip).
+
+    ``shapes_tree``: matching tree of arrays/ShapeDtypeStructs for
+    divisibility guards (recommended).
+    """
+
+    def one(axes, shaped=None):
+        dims = tuple(shaped.shape) if shaped is not None else None
+        spec = spec_for_axes(axes, mesh=mesh, rules=rules, dim_sizes=dims)
+        return NamedSharding(mesh, spec)
+
+    is_axes = lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a)
+    if shapes_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=is_axes)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)

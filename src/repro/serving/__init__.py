@@ -1,0 +1,3 @@
+"""Serving substrate: batched KV-cache decode engine."""
+
+from repro.serving.engine import ServeEngine  # noqa: F401

@@ -1,0 +1,107 @@
+"""Batched serving engine: prefill once, decode step-by-step.
+
+The engine owns a fixed-capacity batch of sequence slots (continuous-batching
+style): each slot tracks its own position, so requests of different lengths
+decode together; a finished slot is refilled by the next request without
+recompiling (positions are data, not shapes).
+
+This is the single-host reference engine; the pjit'd distributed variant
+reuses exactly these step functions through ``launch/steps.build_serve_step``
+(same ``decode_step``, sharded cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as M
+from repro.models.param import unzip
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: dict
+    max_seq: int
+    batch_size: int
+    knobs: M.PerfKnobs = M.DEFAULT_KNOBS
+
+    def __post_init__(self):
+        cache_tree = M.init_cache(self.cfg, self.batch_size, self.max_seq)
+        self.cache, _ = unzip(cache_tree)
+        self.pos = jnp.zeros((self.batch_size,), jnp.int32)
+        self.tokens = jnp.zeros((self.batch_size, 1), jnp.int32)
+        self.active = np.zeros((self.batch_size,), bool)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(self.cfg, p, c, t, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(self.cfg, p, b, knobs=self.knobs)
+        )
+
+    # -- request management -------------------------------------------------
+    def add_request(self, slot: int, prompt: np.ndarray, extras: dict | None = None):
+        """Prefill a prompt into one slot. prompt: (plen,) int32."""
+        plen = len(prompt)
+        assert plen < self.max_seq
+        batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+        batch.update(extras or {})
+        last_logits, cache = self._prefill(self.params, batch)
+
+        # splice this request's prefill cache into the engine cache at `slot`
+        def splice(dst_seg, src_seg):
+            out = {}
+            for k, dst in dst_seg.items():
+                src = src_seg[k].astype(dst.dtype)
+                if k == "h":  # ssm state: no seq axis
+                    out[k] = dst.at[:, slot].set(src[:, 0])
+                elif k.startswith("conv"):
+                    out[k] = dst.at[:, slot].set(src[:, 0])
+                elif k in ("xk", "xv"):  # cross-attn K/V: full frames axis
+                    out[k] = dst.at[:, slot].set(src[:, 0])
+                else:  # attention K/V or MLA latents: seq axis at dim 2
+                    L = src.shape[2]
+                    out[k] = dst.at[:, slot, :L].set(src[:, 0])
+            return out
+
+        self.cache = {
+            "segments": [
+                splice(d, s)
+                for d, s in zip(self.cache["segments"], cache["segments"])
+            ]
+        }
+        self.pos = self.pos.at[slot].set(plen)
+        next_tok = int(jnp.argmax(last_logits[0, -1, : self.cfg.vocab]))
+        self.tokens = self.tokens.at[slot, 0].set(next_tok)
+        self.active[slot] = True
+        return next_tok
+
+    def step(self, sample: Callable | None = None) -> np.ndarray:
+        """One decode step for every active slot. Returns (batch,) next tokens."""
+        logits, self.cache = self._decode(self.params, self.cache, self.tokens, self.pos)
+        logits = logits[:, 0, : self.cfg.vocab]
+        if sample is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = sample(logits)
+        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
+        self.tokens = nxt[:, None]
+        return np.asarray(nxt)
+
+    def generate(self, slot_prompts: dict[int, np.ndarray], n_steps: int,
+                 extras: dict | None = None) -> dict[int, list[int]]:
+        """Convenience: prefill the given slots, decode n_steps greedily."""
+        outs: dict[int, list[int]] = {}
+        for slot, prompt in slot_prompts.items():
+            first = self.add_request(slot, prompt, extras)
+            outs[slot] = [first]
+        for _ in range(n_steps - 1):
+            nxt = self.step()
+            for slot in slot_prompts:
+                outs[slot].append(int(nxt[slot]))
+        return outs

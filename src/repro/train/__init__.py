@@ -1,0 +1,4 @@
+"""Training substrate: pure-JAX optimizers, loop, fault-tolerant checkpoints."""
+
+from repro.train.optimizer import adamw, sgd, Optimizer, cosine_schedule  # noqa: F401
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401

@@ -1,0 +1,72 @@
+"""Train LeNet-5 for the paper reproduction, with on-disk caching.
+
+Both benchmarks (table1 / fig8) and examples need *the same* trained weights;
+``get_trained_lenet`` trains once (a couple of epochs is enough on the
+synthetic set) and caches the result under ``.cache/``.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.mnist import batches, load_mnist, pad_to_32
+from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
+from repro.train.loop import train
+from repro.train.optimizer import adamw, cosine_schedule
+
+CACHE = Path(".cache")
+
+
+def get_trained_lenet(
+    *,
+    epochs: int = 3,
+    train_n: int = 20000,
+    test_n: int = 4000,
+    seed: int = 0,
+    cache: bool = True,
+    verbose: bool = False,
+):
+    """Returns (params, test_images32, test_labels, info dict)."""
+    CACHE.mkdir(exist_ok=True)
+    cache_file = CACHE / f"lenet_e{epochs}_n{train_n}_s{seed}.npz"
+
+    test_x, test_y, source = load_mnist("test", synthetic_n=test_n, seed=seed)
+    test_x32 = pad_to_32(test_x)
+
+    if cache and cache_file.exists():
+        with np.load(cache_file) as z:
+            params = {
+                layer: {"w": z[f"{layer}_w"], "b": z[f"{layer}_b"]}
+                for layer in ("conv1", "conv2", "conv3", "fc1", "fc2")
+            }
+        acc = lenet_accuracy(params, test_x32, test_y)
+        return params, test_x32, test_y, {"source": source, "test_acc": acc, "cached": True}
+
+    train_x, train_y, _ = load_mnist("train", synthetic_n=train_n, seed=seed)
+    train_x32 = pad_to_32(train_x)
+
+    params = init_lenet(jax.random.key(seed))
+    steps_per_epoch = train_n // 128
+    opt = adamw(cosine_schedule(1e-3, steps_per_epoch * epochs, warmup_steps=50))
+    data = batches(train_x32, train_y, 128, seed=seed, epochs=epochs)
+    params, info = train(
+        params, lenet_loss, opt, data, log_every=0, verbose=verbose
+    )
+
+    if cache:
+        flat = {}
+        for layer, sub in params.items():
+            flat[f"{layer}_w"] = np.asarray(sub["w"])
+            flat[f"{layer}_b"] = np.asarray(sub["b"])
+        np.savez(cache_file, **flat)
+
+    acc = lenet_accuracy(params, test_x32, test_y)
+    return params, test_x32, test_y, {
+        "source": source,
+        "test_acc": acc,
+        "cached": False,
+        "train_steps": info["steps"],
+    }

@@ -1,0 +1,72 @@
+"""Generic single-host train loop used by LeNet repro + LM smoke training.
+
+The distributed (pjit) loop lives in ``repro/launch/train.py``; this module is
+the small-scale substrate: jit'd step, metrics, periodic checkpointing, and
+resume-from-latest (fault tolerance is exercised by tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.optimizer import Optimizer
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer):
+    """loss_fn(params, *batch) -> (loss, aux). Returns jit'd step fn."""
+
+    @jax.jit
+    def step(params, opt_state, step_idx, *batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, *batch)
+        new_params, new_state = optimizer.update(grads, opt_state, params, step_idx)
+        return new_params, new_state, loss, aux
+
+    return step
+
+
+def train(
+    params: Any,
+    loss_fn: Callable,
+    optimizer: Optimizer,
+    data: Iterable,
+    *,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    log_every: int = 50,
+    max_steps: int | None = None,
+    verbose: bool = True,
+) -> tuple[Any, dict]:
+    """Run the loop; resumes from ckpt_dir if it already has checkpoints."""
+    opt_state = optimizer.init(params)
+    start = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, opt_state), meta = restore_checkpoint(ckpt_dir, (params, opt_state))
+        start = meta.get("step", latest_step(ckpt_dir))
+        if verbose:
+            print(f"[train] resumed from step {start}")
+
+    step_fn = make_train_step(loss_fn, optimizer)
+    t0 = time.time()
+    i = start
+    last_loss, last_aux = float("nan"), None
+    for i, batch in enumerate(data, start=start):
+        if max_steps is not None and i >= max_steps:
+            break
+        batch = tuple(jnp.asarray(b) for b in batch)
+        params, opt_state, loss, aux = step_fn(params, opt_state, i, *batch)
+        last_loss, last_aux = float(loss), aux
+        if verbose and log_every and (i + 1) % log_every == 0:
+            print(
+                f"[train] step {i+1} loss {last_loss:.4f} aux {jax.tree.map(float, aux)}"
+                f" ({(i + 1 - start) / (time.time() - t0):.1f} it/s)"
+            )
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1, (params, opt_state), metadata={"step": i + 1})
+    if ckpt_dir and ckpt_every:
+        save_checkpoint(ckpt_dir, i + 1, (params, opt_state), metadata={"step": i + 1})
+    return params, {"last_loss": last_loss, "last_aux": last_aux, "steps": i + 1 - start}

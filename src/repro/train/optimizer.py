@@ -1,0 +1,132 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+``Optimizer`` is the usual (init, update) pair over parameter pytrees.
+States are pytrees with the same structure as the params, so they shard with
+the identical logical rules (critical for FSDP: optimizer state lives on the
+same shards as its parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def cosine_schedule(
+    base_lr: float, total_steps: int, warmup_steps: int = 0, min_ratio: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(1, warmup_steps))
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(1, total_steps - warmup_steps), 0, 1
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * warm * cos
+
+    return lr
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 1.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW with decoupled weight decay + optional global-norm clipping.
+
+    Moments are kept in fp32 regardless of param dtype (bf16-safe)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params, state_dtype),
+            "v": _tree_zeros_like(params, state_dtype),
+        }
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step1 = jnp.asarray(step, jnp.int32) + 1
+        lr_t = lr_fn(step1)
+        c1 = 1.0 - b1 ** step1.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step1.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(state_dtype)
+            m_ = b1 * m + (1 - b1) * g32
+            v_ = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m_ / c1
+            vhat = v_ / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(state_dtype)
+            p_ = p.astype(state_dtype) - lr_t * delta
+            return p_.astype(p.dtype), m_, v_
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        # unzip the 3-tuples
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-2,
+    *,
+    momentum: float = 0.9,
+    grad_clip: float | None = None,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mom": _tree_zeros_like(params, jnp.float32)}
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = lr_fn(jnp.asarray(step, jnp.int32) + 1)
+
+        def upd(p, g, m):
+            m_ = momentum * m + g.astype(jnp.float32)
+            p_ = p.astype(jnp.float32) - lr_t * m_
+            return p_.astype(p.dtype), m_
+
+        out = jax.tree.map(upd, params, grads, state["mom"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mom": new_m}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + train step + prefill + decode step on CPU; asserts output shapes
+and finiteness (no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.launch.inputs import make_batch
+from repro.models import lm as M
+from repro.models.param import unzip
+
+B, S = 2, 32
+KNOBS = M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none")
+
+
+def _setup(arch):
+    cfg = get_smoke_config(arch)
+    tree = M.init_lm(cfg, jax.random.key(0))
+    params, _ = unzip(tree)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params = _setup(arch)
+    batch = make_batch(cfg, B, S, "train")
+    logits, aux, _ = M.lm_forward(cfg, params, batch, knobs=KNOBS)
+    assert logits.shape == (B, S, M.padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab]).all()), "NaN/inf in logits"
+    # padded vocab positions are masked to -1e9
+    if M.padded_vocab(cfg) > cfg.vocab:
+        assert float(logits[..., cfg.vocab :].max()) < -1e8
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step(arch):
+    cfg, params = _setup(arch)
+    batch = make_batch(cfg, B, S, "train")
+
+    def loss_fn(p):
+        return M.lm_loss(cfg, p, batch, knobs=KNOBS)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, "gradients must flow"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    """Decode step after prefill must agree with the full forward pass
+    evaluated one token later (the cache is a faithful sufficient statistic)."""
+    cfg, params = _setup(arch)
+    batch = make_batch(cfg, B, S, "prefill")
+    tokens = batch["tokens"]
+
+    # full forward over S+0 .. S tokens for reference
+    logits_all, _, _ = M.lm_forward(cfg, params, batch, knobs=KNOBS)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    batch_m1 = dict(batch)
+    batch_m1["tokens"] = tokens[:, : S - 1]
+    if cfg.vision_prefix:
+        pass  # patches span the prefix; unchanged
+    last_logits, cache = M.prefill(cfg, params, batch_m1, knobs=KNOBS)
+    np.testing.assert_allclose(
+        np.asarray(last_logits[:, 0, : cfg.vocab], np.float32),
+        np.asarray(logits_all[:, S - 2, : cfg.vocab], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+    # grow cache to full length then decode the final token
+    cache_full = M.init_cache(cfg, B, S + 4)
+    cache_vals, _ = unzip(cache_full)
+
+    def splice(dst, src):
+        # copy prefill cache (length S-1 in seq dims) into the bigger buffer
+        if src.dtype != dst.dtype:
+            src = src.astype(dst.dtype)
+        sl = tuple(slice(0, s) for s in src.shape)
+        return dst.at[sl].set(src)
+
+    cache_segs = jax.tree.map(splice, cache_vals["segments"], cache["segments"])
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits_dec, _ = M.decode_step(
+        cfg, params, {"segments": cache_segs}, tokens[:, S - 1 :], pos
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0, : cfg.vocab], np.float32),
+        np.asarray(logits_all[:, S - 1, : cfg.vocab], np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_parses(arch):
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    assert cfg.n_layers >= 1
+    segs = cfg.segments()
+    assert sum(n for _, n in segs) == cfg.n_layers
+    n = cfg.param_count()
+    assert n > 0

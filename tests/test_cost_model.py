@@ -1,0 +1,66 @@
+"""The ASIC cost model must reproduce the paper's §IV headline numbers."""
+import pytest
+
+from repro.core.cost_model import (
+    AsicCostModel,
+    OpCounts,
+    paper_table1,
+    TPU_V5E,
+)
+
+
+BASE = OpCounts(mults=405600, adds=405600, subs=0)
+
+
+def test_headline_power_saving_at_0p05():
+    """Paper: rounding 0.05 → 32.03% power saving."""
+    m = AsicCostModel()
+    new = OpCounts(mults=242153, adds=242153, subs=163447)
+    assert m.power_saving(BASE, new) == pytest.approx(0.3203, abs=2e-4)
+
+
+def test_headline_area_saving_at_0p05():
+    """Paper: rounding 0.05 → 24.59% area saving."""
+    m = AsicCostModel()
+    new = OpCounts(mults=242153, adds=242153, subs=163447)
+    assert m.area_saving(BASE, new) == pytest.approx(0.2459, abs=2e-4)
+
+
+def test_mult_ratios_physically_plausible():
+    """Calibrated ratios should sit near published 45-65nm numbers
+    (Horowitz ISSCC'14: energy ratio ≈ 4.1, area ratio ≈ 1.8)."""
+    m = AsicCostModel()
+    assert 2.5 < m.e_mul < 5.5
+    assert 1.2 < m.a_mul < 2.2
+
+
+def test_savings_monotone_in_rounding():
+    """Walking down Table I, power and area savings must both increase."""
+    m = AsicCostModel()
+    last_p, last_a = -1.0, -1.0
+    for row in paper_table1():
+        new = OpCounts(row["mults"], row["adds"], row["subs"])
+        p = m.power_saving(BASE, new)
+        a = m.area_saving(BASE, new)
+        assert p >= last_p and a >= last_a
+        last_p, last_a = p, a
+
+
+def test_table1_internal_consistency():
+    """In Table I: adds == mults and adds + subs == 405600 for every row
+    (each pair converts one mult + one add into one sub)."""
+    for row in paper_table1():
+        assert row["adds"] == row["mults"]
+        assert row["adds"] + row["subs"] == 405600
+
+
+def test_roofline_terms():
+    t = TPU_V5E.terms(hlo_flops=197e12, hlo_bytes=819e9, collective_bytes=0.0)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == 0.0
+    assert t["bound"] in ("compute", "memory")
+
+    t2 = TPU_V5E.terms(1e12, 1e9, 500e9)
+    assert t2["bound"] == "collective"
+    assert t2["t_collective_s"] == pytest.approx(10.0)

@@ -1,0 +1,192 @@
+"""Tests for the paper's Algorithm 1 and its vectorised / structured variants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pairing import (
+    pair_list_twopointer,
+    pair_columns,
+    fold_columns,
+    pair_rows_structured,
+    pairing_op_counts,
+    column_pairing_for_conv,
+)
+
+
+def test_rounding_zero_finds_no_pairs():
+    """Table I row 0: rounding size 0 → zero subtractions."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=100)
+    res = pair_list_twopointer(w, 0.0)
+    assert res.n_pairs == 0
+    assert len(res.uncombined) == 100
+
+
+def test_exact_opposites_pair_fully():
+    w = np.array([0.5, -0.5, 0.25, -0.25, 1.0, -1.0])
+    res = pair_list_twopointer(w, 1e-9)
+    assert res.n_pairs == 3
+    # pair magnitudes are the common |value|
+    assert sorted(res.pair_mag.tolist()) == [0.25, 0.5, 1.0]
+    # each pair is (positive index, negative index)
+    for i, j in zip(res.pair_pos, res.pair_neg):
+        assert w[i] > 0 and w[j] < 0
+        assert abs(w[i] + w[j]) < 1e-12
+
+
+def test_pairs_within_rounding_only():
+    w = np.array([0.50, -0.53, 0.20, -0.35])
+    res = pair_list_twopointer(w, 0.05)
+    assert res.n_pairs == 1  # only (0.50, -0.53) is within 0.05
+    assert res.pair_mag[0] == pytest.approx(0.515)
+
+
+def test_monotone_in_rounding():
+    """Bigger rounding ⇒ at least as many pairs (Table I trend)."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=500)
+    last = -1
+    for r in [0.0, 0.0001, 0.005, 0.05, 0.1, 0.3]:
+        n = pair_list_twopointer(w, r).n_pairs
+        assert n >= last
+        last = n
+
+
+def test_every_weight_accounted_once():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=301)
+    res = pair_list_twopointer(w, 0.02)
+    touched = np.concatenate([res.pair_pos, res.pair_neg, res.uncombined])
+    assert sorted(touched.tolist()) == list(range(301))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=60),
+    st.integers(min_value=1, max_value=8),
+    st.floats(min_value=0.0, max_value=0.5),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pair_columns_matches_twopointer_oracle(k, n, rounding, seed):
+    """The vectorised per-column pairing is bit-identical to Algorithm 1."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(k, n)) * rng.uniform(0.1, 2.0)
+    cp = pair_columns(W, rounding)
+    for col in range(n):
+        ref = pair_list_twopointer(W[:, col], rounding)
+        got = cp.n_pairs[col]
+        assert got == ref.n_pairs
+        if ref.n_pairs:
+            assert cp.pair_pos[: got, col].tolist() == ref.pair_pos.tolist()
+            assert cp.pair_neg[: got, col].tolist() == ref.pair_neg.tolist()
+            np.testing.assert_allclose(cp.pair_mag[: got, col], ref.pair_mag)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=40),
+    st.integers(min_value=1, max_value=6),
+    st.floats(min_value=1e-4, max_value=0.3),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fold_error_bounded_by_half_rounding(k, n, rounding, seed):
+    """Snapping both pair members to k=(|a|+|b|)/2 perturbs each weight by
+    at most rounding/2 — the accuracy knob the paper advertises."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(k, n))
+    cp = pair_columns(W, rounding)
+    Wf = fold_columns(W, cp)
+    assert np.max(np.abs(Wf - W)) <= rounding / 2 + 1e-12
+
+
+def test_fold_equals_subtractor_dataflow():
+    """fold_columns produces the matrix whose plain matmul equals the
+    subtractor evaluation k*(x_i - x_j) + residual MACs."""
+    rng = np.random.default_rng(3)
+    W = rng.normal(size=(32, 4))
+    x = rng.normal(size=(5, 32))
+    cp = pair_columns(W, 0.1)
+    Wf = fold_columns(W, cp)
+    # manual subtractor evaluation, per column
+    y = np.zeros((5, 4))
+    for col in range(4):
+        used = np.zeros(32, dtype=bool)
+        for p in range(cp.n_pairs[col]):
+            i, j = cp.pair_pos[p, col], cp.pair_neg[p, col]
+            k = cp.pair_mag[p, col]
+            y[:, col] += k * (x[:, i] - x[:, j])  # eq. (1)
+            used[[i, j]] = True
+        y[:, col] += x[:, ~used] @ W[~used, col]
+    np.testing.assert_allclose(y, x @ Wf, rtol=1e-12, atol=1e-12)
+
+
+def test_op_counts():
+    c = pairing_op_counts(total_weights=150, n_pairs=20, positions=100)
+    assert c["mults"] == c["adds"] == (150 - 20) * 100
+    assert c["subs"] == 20 * 100
+    assert c["total"] == c["baseline_total"] - c["subs"]
+
+
+def test_conv_pairing_is_per_filter():
+    """Pairs must never cross output channels (they accumulate separately)."""
+    rng = np.random.default_rng(4)
+    kern = rng.normal(size=(5, 5, 3, 8))
+    cp = column_pairing_for_conv(kern, 0.05)
+    assert cp.shape == (75, 8)
+    flat = kern.reshape(75, 8)
+    for col in range(8):
+        for p in range(cp.n_pairs[col]):
+            i, j = cp.pair_pos[p, col], cp.pair_neg[p, col]
+            assert flat[i, col] > 0 and flat[j, col] < 0
+
+
+# ---------------------------------------------------------------------------
+# structured pairing
+# ---------------------------------------------------------------------------
+
+
+def test_structured_partition_is_exact():
+    rng = np.random.default_rng(5)
+    W = rng.normal(size=(64, 16))
+    sp = pair_rows_structured(W, 0.2)
+    perm = sp.perm()
+    assert sorted(perm.tolist()) == list(range(64))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=64),
+    st.integers(min_value=1, max_value=8),
+    st.floats(min_value=1e-3, max_value=0.5),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_structured_fold_error_bound(k, n, rounding, seed):
+    """Structured pairing drops only the symmetric part s with rms(s) < r/…
+    — elementwise error of the folded matrix is bounded by the criterion."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(k, n))
+    sp = pair_rows_structured(W, rounding, criterion="max")
+    Wf = sp.fold()
+    # error only on paired rows, equals |symmetric part| < rounding/2
+    err = np.abs(Wf - W)
+    assert err.max(initial=0.0) <= rounding / 2 + 1e-12
+
+
+def test_structured_matmul_equivalence():
+    """(x[:,I]-x[:,J]) @ Kmat + x[:,R] @ W_res  ==  x @ fold()."""
+    rng = np.random.default_rng(6)
+    W = rng.normal(size=(48, 12))
+    x = rng.normal(size=(7, 48))
+    sp = pair_rows_structured(W, 0.3)
+    y_paired = (x[:, sp.I] - x[:, sp.J]) @ sp.Kmat + x[:, sp.resid] @ sp.W_res
+    np.testing.assert_allclose(y_paired, x @ sp.fold(), rtol=1e-12, atol=1e-12)
+
+
+def test_structured_antisymmetric_pairs_everything():
+    """A perfectly antisymmetric weight matrix pairs all rows."""
+    rng = np.random.default_rng(7)
+    half = rng.normal(size=(32, 8)) + 3.0  # keep means positive
+    W = np.concatenate([half, -half], axis=0)
+    sp = pair_rows_structured(W, 1e-6)
+    assert sp.n_pairs == 32
+    np.testing.assert_allclose(sp.fold(), W, atol=1e-12)

@@ -1,0 +1,51 @@
+"""Serving engine: prefill+decode must agree with teacher-forced forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.serving.engine import ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-2.7b", "hymba-1.5b"])
+def test_greedy_generation_matches_teacher_forcing(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    eng = ServeEngine(cfg, params, max_seq=48, batch_size=2,
+                      knobs=M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none"))
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    outs = eng.generate({0: prompt}, n_steps=6)
+    gen = outs[0]
+    assert len(gen) == 6
+
+    # teacher-forced reference: feed prompt+gen through the full forward and
+    # check greedy argmax reproduces each generated token
+    seq = np.concatenate([prompt, np.asarray(gen[:-1], np.int32)])
+    logits, _, _ = M.lm_forward(
+        cfg, params, {"tokens": jnp.asarray(seq[None])},
+        knobs=M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none"),
+    )
+    ref = np.asarray(jnp.argmax(logits[0, len(prompt) - 1 :, : cfg.vocab], -1))
+    np.testing.assert_array_equal(np.asarray(gen), ref[: len(gen)])
+
+
+def test_two_slot_batch_decodes_independently():
+    cfg = get_smoke_config("qwen2-1.5b")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(1)))
+    eng = ServeEngine(cfg, params, max_seq=32, batch_size=2,
+                      knobs=M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none"))
+    rng = np.random.default_rng(1)
+    pa = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    outs = eng.generate({0: pa, 1: pb}, n_steps=4)
+
+    # single-slot reference for slot 0
+    eng2 = ServeEngine(cfg, params, max_seq=32, batch_size=2,
+                       knobs=M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none"))
+    ref = eng2.generate({0: pa}, n_steps=4)
+    assert outs[0] == ref[0], "slot 1's presence must not change slot 0's output"

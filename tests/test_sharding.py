@@ -1,0 +1,80 @@
+"""Sharding rules: divisibility guards, mesh-axis dedup, rule tables."""
+import os
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.parallel.rules import rules_for
+from repro.parallel.sharding import Rules, spec_for_axes
+
+
+def _mesh2():
+    n = jax.device_count()
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+RULES = Rules({"batch": ("data",), "ff": "model", "vocab": "model",
+               "q_heads": "model", "embed": None})
+
+
+def test_spec_basic():
+    mesh = _mesh2()
+    spec = spec_for_axes(("embed", "ff"), mesh=mesh, rules=RULES)
+    assert spec == P(None, "model")
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs a >1-way mesh axis")
+def test_divisibility_guard_replicates():
+    mesh = _mesh2()
+    n = mesh.shape["model"]
+    # dim not divisible by the model axis → replicated
+    spec = spec_for_axes(("q_heads",), mesh=mesh, rules=RULES, dim_sizes=(n + 1,))
+    assert spec == P(None)
+    spec2 = spec_for_axes(("q_heads",), mesh=mesh, rules=RULES, dim_sizes=(n * 3,))
+    assert spec2 == P("model")
+
+
+def test_divisibility_guard_unit_axis():
+    """On a size-1 axis everything divides — spec keeps the mapping."""
+    mesh = _mesh2()
+    spec = spec_for_axes(("q_heads",), mesh=mesh, rules=RULES,
+                         dim_sizes=(mesh.shape["model"] * 3,))
+    assert spec == P("model")
+
+
+def test_mesh_axis_used_once():
+    """Two logical axes mapping to `model`: priority order wins, later → None."""
+    mesh = _mesh2()
+    spec = spec_for_axes(("vocab", "ff"), mesh=mesh, rules=RULES)
+    assert list(spec).count("model") == 1
+    # "vocab" has priority over... both map to model; exactly one survives
+    assert spec[0] == "model" or spec[1] == "model"
+
+
+def test_rules_for_all_archs_and_modes():
+    mesh = _mesh2()
+    for arch in ("qwen2-1.5b", "deepseek-v2-lite-16b", "mamba2-2.7b", "mistral-large-123b"):
+        cfg = get_config(arch)
+        for mode in ("train", "prefill", "decode"):
+            r = rules_for(cfg, mode, mesh)
+            assert r.mesh_axes("layers") is None, "scan dim never shards"
+            assert r.mesh_axes("batch") == ("data",)
+    big = rules_for(get_config("mistral-large-123b"), "train", mesh)
+    assert big.mesh_axes("embed") == "data", "123B trains with FSDP"
+    small = rules_for(get_config("qwen2-1.5b"), "train", mesh)
+    assert small.mesh_axes("embed") is None
+
+
+def test_constrain_noop_outside_context():
+    import jax.numpy as jnp
+
+    from repro.parallel.sharding import constrain
+
+    x = jnp.ones((4, 4))
+    y = constrain(x, "batch", None)  # no mesh/rules active → identity
+    assert (y == x).all()

@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full loop: train LeNet-5 → pair weights at increasing rounding →
+accuracy degrades monotonically-ish while modeled power saving grows —
+the paper's central trade-off, exercised end to end on a small budget.
+Plus: LM training actually learns, and paired LM weights stay functional.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import AsicCostModel, OpCounts
+from repro.core.transform import pair_model_params
+from repro.data.tokens import token_batches
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.train.lenet_trainer import get_trained_lenet
+from repro.models.lenet import lenet_accuracy
+from benchmarks.fig8 import paired_lenet
+
+
+def test_lenet_pairing_tradeoff_end_to_end():
+    params, test_x, test_y, info = get_trained_lenet(
+        epochs=2, train_n=8000, test_n=2000, seed=0, cache=True, verbose=False
+    )
+    base_acc = info["test_acc"]
+    assert base_acc > 0.9, f"LeNet must train (got {base_acc})"
+
+    model = AsicCostModel()
+    base_ops = OpCounts(405600, 405600, 0)
+    accs, savings = [], []
+    for r in (0.001, 0.02, 0.3):
+        p2, ops = paired_lenet(params, r)
+        accs.append(lenet_accuracy(p2, test_x, test_y))
+        savings.append(model.power_saving(base_ops, ops))
+    # savings grow with rounding; tiny rounding preserves accuracy
+    assert savings[0] < savings[1] < savings[2]
+    assert accs[0] > base_acc - 0.02
+    assert accs[2] <= accs[0] + 1e-9  # aggressive rounding can't beat gentle
+
+
+def test_lm_training_learns_and_paired_weights_serve():
+    """A tiny LM learns the synthetic stream; pairing at small rounding
+    leaves its loss nearly unchanged (the paper's deployment story)."""
+    from repro.configs.base import ModelConfig
+    from repro.train.optimizer import adamw
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                      tie_embeddings=True)
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none")
+    opt = adamw(3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i, tok, lab):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: M.lm_loss(cfg, pp, {"tokens": tok, "labels": lab}, knobs=knobs),
+            has_aux=True,
+        )(p)
+        p, s = opt.update(g, s, p, i)
+        return p, s, loss
+
+    data = token_batches(8, 64, cfg.vocab, seed=2)
+    losses = []
+    for i, (tok, lab) in enumerate(data):
+        if i >= 120:
+            break
+        params, state, loss = step(params, state, jnp.int32(i), jnp.asarray(tok), jnp.asarray(lab))
+        losses.append(float(loss))
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first - 0.08, f"no learning: {first:.3f} -> {last:.3f}"
+
+    # pair the trained weights gently; loss must stay close
+    paired, report = pair_model_params(params, rounding=0.003, min_dim=4)
+    tok, lab = next(token_batches(8, 64, cfg.vocab, seed=99))
+    l0, _ = M.lm_loss(cfg, params, {"tokens": jnp.asarray(tok), "labels": jnp.asarray(lab)}, knobs=knobs)
+    l1, _ = M.lm_loss(cfg, paired, {"tokens": jnp.asarray(tok), "labels": jnp.asarray(lab)}, knobs=knobs)
+    assert report.total_pairs > 0
+    assert abs(float(l1) - float(l0)) < 0.05, (float(l0), float(l1))
