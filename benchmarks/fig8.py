@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.cost_model import AsicCostModel, OpCounts
 from repro.core.pairing import column_pairing_for_conv, fold_columns, pairing_op_counts
+from repro.kernels.tuning import choose_blocks
 from repro.models.lenet import LENET_CONV_SHAPES, lenet_accuracy
 from repro.train.lenet_trainer import get_trained_lenet
 
@@ -77,10 +78,23 @@ def run(quick: bool = False) -> dict:
         "hist_edges": edges.tolist(),
     }
 
+    # TPU tile configs for each conv layer viewed as a GEMM (M = output
+    # positions, K = receptive field, N = filters): what the K-tiled paired
+    # kernel would use, recorded so hardware runs are reproducible.
+    tile_configs = {}
+    for name, (shape, pos) in LENET_CONV_SHAPES.items():
+        H, W, Cin, Cout = shape
+        K = H * W * Cin
+        cp = column_pairing_for_conv(np.asarray(params[name]["w"], np.float64), 0.05)
+        P = int(np.min(cp.n_pairs)) if cp.n_pairs.size else 0  # shared floor
+        tiles = choose_blocks(pos, Cout, P, K - 2 * P, dtype_bytes=4)
+        tile_configs[name] = {"M": pos, "N": Cout, "K": K, **tiles.as_dict()}
+
     out = {
         "rows": rows,
         "baseline_accuracy": base_acc,
         "data_source": info["source"],
+        "kernel_tile_configs": tile_configs,
         "conv3_weight_distribution": dist,
         "paper_headline": {
             "rounding": 0.05,

@@ -4,11 +4,20 @@ per chip), the dominant bound, and the useful-compute ratio, for every
 (arch × shape) on the single-pod mesh (per the task spec; multi-pod cells
 prove the pod axis shards and are listed in §Dry-run).
 
+Also sweeps ``block_k`` for the K-tiled paired GEMM kernel
+(kernels/paired_matmul.py): for each representative (M, N, K, pair-rate)
+shape it validates every tile config against the jnp oracle in interpret
+mode, records the estimated per-program VMEM working set and analytic HBM
+traffic, and marks the tuning heuristic's pick — the data the heuristic in
+kernels/tuning.py is judged against.
+
     PYTHONPATH=src python -m benchmarks.roofline
 """
 from __future__ import annotations
 
 import json
+import time
+import zlib
 from pathlib import Path
 
 from repro.core.cost_model import TPU_V5E
@@ -16,6 +25,16 @@ from repro.core.cost_model import TPU_V5E
 from benchmarks.common import fmt_table, write_result
 
 DRYRUN_DIR = Path(__file__).parent / "results" / "dryrun"
+
+# (label, M, N, K, pair_fraction): pair_fraction of K lanes pair off in I/J
+# halves; the rest stay residual.  Shapes follow the workloads the configs
+# directory names (decode row, LeNet-ish conv-as-GEMM, d_model-scale FFN).
+KERNEL_SWEEP_SHAPES = [
+    ("decode_row", 8, 512, 4096, 0.5),
+    ("conv_gemm", 256, 120, 400, 0.4),
+    ("ffn_proj", 128, 1024, 8192, 0.25),
+]
+BLOCK_KS = [128, 256, 512, 1024]
 
 
 def load_cells(mesh: str = "pod16x16", tag: str = "") -> list[dict]:
@@ -59,19 +78,94 @@ def roofline_row(d: dict) -> dict:
     }
 
 
+def kernel_block_sweep(quick: bool = False) -> list[dict]:
+    """Sweep block_k for the paired GEMM; validate each config vs the oracle.
+
+    Runs in interpret mode (this container has no TPU), so the timing column
+    is *not* hardware time — the actionable outputs are correctness, the
+    VMEM working-set estimate per tile config, and the analytic HBM traffic
+    (streamed tiles per output block), which is what distinguishes tile
+    configs on hardware.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.kernels.paired_matmul import paired_matmul_pallas
+    from repro.kernels.ref import paired_matmul_ref
+    from repro.kernels.tuning import choose_blocks, kernel_vmem_bytes
+
+    rows = []
+    shapes = KERNEL_SWEEP_SHAPES[:2] if quick else KERNEL_SWEEP_SHAPES
+    block_ks = BLOCK_KS[:2] if quick else BLOCK_KS
+    for label, M, N, K, frac in shapes:
+        P = int(K * frac / 2)
+        R = K - 2 * P
+        rng = np.random.default_rng(zlib.crc32(label.encode()))
+        x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        kmat = jnp.asarray(rng.normal(size=(P, N)), jnp.float32)
+        w_res = jnp.asarray(rng.normal(size=(R, N)), jnp.float32)
+        want = np.asarray(paired_matmul_ref(x, kmat, w_res))
+        scale = np.abs(want).max()
+        pick = choose_blocks(M, N, P, R, dtype_bytes=4)
+        # always sweep the heuristic's own pick, or the marked config would
+        # be the one config the sweep never validates
+        for bk in sorted(set(block_ks) | {pick.block_k}):
+            bm, bn = min(128, M), min(128, N)
+            t0 = time.perf_counter()
+            got = np.asarray(
+                paired_matmul_pallas(
+                    x, kmat, w_res,
+                    block_m=bm, block_n=bn, block_k=bk, interpret=True,
+                )
+            )
+            dt = time.perf_counter() - t0
+            err = float(np.abs(got - want).max() / scale)
+            # analytic HBM traffic: every output tile streams its full
+            # paired + residual K once (x tiles + weight tiles) + writeback
+            n_tiles = -(-M // bm) * (-(-N // bn))
+            stream = (2 * bm * P + P * bn + bm * R + R * bn) * 4
+            hbm = n_tiles * stream + M * N * 4
+            rows.append(
+                {
+                    "shape": label,
+                    "MNK": f"{M}x{N}x{K}",
+                    "pairs": P,
+                    "block_k": bk,
+                    "rel_err": err,
+                    "vmem_KiB": kernel_vmem_bytes(
+                        bm, bn, min(bk, max(P, R, 1)),
+                        dtype_bytes=4, has_pairs=P > 0, has_resid=R > 0,
+                    ) / 1024,
+                    "hbm_MiB": hbm / 2**20,
+                    "interp_s": dt,
+                    "heuristic": "<<" if bk == pick.block_k else "",
+                    "tile": f"{bm}x{bn}x{bk}",
+                }
+            )
+            assert err <= 1e-5, f"{label} block_k={bk}: rel err {err:.2e}"
+    return rows
+
+
 def run(quick: bool = False) -> dict:
+    sweep = kernel_block_sweep(quick)
+    cols = ["shape", "MNK", "pairs", "block_k", "rel_err", "vmem_KiB",
+            "hbm_MiB", "interp_s", "heuristic"]
+    print(fmt_table(sweep, cols, "Paired-GEMM block_k sweep (interpret mode)"))
+
     cells = load_cells()
+    rows = []
     if not cells:
-        print("[roofline] no dry-run results found — run repro.launch.dryrun first")
-        return {"rows": []}
-    rows = [roofline_row(d) for d in cells]
-    cols = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
-            "bound", "useful", "hbm_GiB", "fits"]
-    print(fmt_table(rows, cols, "Roofline (single-pod 16x16, per chip per step)"))
-    n_over = sum(1 for r in rows if r.get("fits") == "OVER")
-    n_fail = sum(1 for r in rows if r.get("bound") == "FAILED")
-    print(f"[roofline] {len(rows)} cells; {n_fail} failed; {n_over} over-HBM")
-    out = {"rows": rows}
+        print("[roofline] no dry-run results found — run repro.launch.dryrun "
+              "for the arch x shape table")
+    else:
+        rows = [roofline_row(d) for d in cells]
+        cols = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+                "bound", "useful", "hbm_GiB", "fits"]
+        print(fmt_table(rows, cols, "Roofline (single-pod 16x16, per chip per step)"))
+        n_over = sum(1 for r in rows if r.get("fits") == "OVER")
+        n_fail = sum(1 for r in rows if r.get("bound") == "FAILED")
+        print(f"[roofline] {len(rows)} cells; {n_fail} failed; {n_over} over-HBM")
+    out = {"rows": rows, "kernel_block_sweep": sweep}
     write_result("roofline", out)
     return out
 

@@ -1,9 +1,18 @@
 """Pallas TPU kernels for the perf-critical compute of the paper.
 
 paired_matmul — the paper's "modified convolution unit" (Fig. 5) adapted to
-the TPU: the subtract-then-MAC dataflow as a fused VMEM-tiled GEMM with a
-reduced contraction dimension.  ops.py carries the jit'd public wrappers
-(kernel on TPU, interpret mode on CPU); ref.py the pure-jnp oracles.
+the TPU: the subtract-then-MAC dataflow as a K-tiled, epilogue-fused GEMM
+with a reduced contraction dimension (grid (m, n, k), fp32 VMEM
+accumulator — see paired_matmul.py "Kernel tiling").  ops.py carries the
+jit'd public wrappers (kernel on TPU, interpret mode on CPU) plus the
+``pallas_gemm`` policy that routes model-layer GEMMs through the kernels;
+tuning.py the heuristic tile chooser; ref.py the pure-jnp oracles.
 """
 
-from repro.kernels.ops import paired_matmul, dense_matmul  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    dense_matmul,
+    gemm_context,
+    paired_matmul,
+    pallas_gemm,
+)
+from repro.kernels.tuning import TileConfig, choose_blocks  # noqa: F401

@@ -2,19 +2,33 @@
 
 On a real TPU backend ``interpret=False`` compiles the Mosaic kernel; in this
 CPU container the kernels run (and are tested) in interpret mode.  The
-wrapper also owns the *deployment* plumbing: applying a
-:class:`repro.core.pairing.StructuredPairing` to activations, including the
-input permutation (which in production folds into the previous layer).
+wrapper also owns the *deployment* plumbing:
+
+* applying a :class:`repro.core.pairing.StructuredPairing` to activations,
+  including the input permutation (which in production folds into the
+  previous layer);
+* resolving tile sizes — pass ``block_* = 0`` and the heuristic in
+  :mod:`repro.kernels.tuning` picks VMEM-safe tiles for the shape;
+* the **GEMM policy**: :func:`pallas_gemm` installs a thread-local policy
+  that makes :func:`repro.models.layers.dense` (and everything built on it —
+  MLP blocks, the serving engine, the pjit'd step builders) route its
+  matmuls through the fused kernels instead of XLA einsums.  Activating the
+  policy around a ``jax.jit`` trace bakes the kernels into the compiled
+  step.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pairing import StructuredPairing
+from repro.kernels import tuning
 from repro.kernels.paired_matmul import dense_matmul_pallas, paired_matmul_pallas
 
 
@@ -22,39 +36,72 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "activation", "interpret"),
+)
 def paired_matmul(
     x: jax.Array,
     kmat: jax.Array,
     w_res: jax.Array,
+    bias: jax.Array | None = None,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """(…, K) @ paired weights → (…, N). x pre-permuted to [I|J|residual]."""
+    """(…, K) @ paired weights → (…, N). x pre-permuted to [I|J|residual].
+
+    ``block_* = 0`` → heuristic tiles from :mod:`repro.kernels.tuning`.
+    ``bias``/``activation`` fuse into the kernel epilogue.
+    """
     interp = (not _on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    tiles = tuning.resolve_blocks(
+        x2.shape[0], kmat.shape[1], kmat.shape[0], w_res.shape[0],
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        dtype_bytes=x.dtype.itemsize,
+    )
     y = paired_matmul_pallas(
-        x2, kmat, w_res, block_m=block_m, block_n=block_n, interpret=interp
+        x2, kmat, w_res, bias,
+        block_m=tiles.block_m, block_n=tiles.block_n, block_k=tiles.block_k,
+        activation=activation, interpret=interp,
     )
     return y.reshape(*lead, y.shape[-1])
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "activation", "interpret"),
+)
 def dense_matmul(
     x: jax.Array,
     w: jax.Array,
+    bias: jax.Array | None = None,
     *,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    activation: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
+    """Plain K-tiled GEMM with the same tiling/epilogue as the paired kernel."""
     interp = (not _on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = dense_matmul_pallas(x2, w, block_m=block_m, block_n=block_n, interpret=interp)
+    tiles = tuning.resolve_blocks(
+        x2.shape[0], w.shape[1], 0, w.shape[0],
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        dtype_bytes=x.dtype.itemsize,
+    )
+    y = dense_matmul_pallas(
+        x2, w, bias,
+        block_m=tiles.block_m, block_n=tiles.block_n, block_k=tiles.block_k,
+        activation=activation, interpret=interp,
+    )
     return y.reshape(*lead, y.shape[-1])
 
 
@@ -72,3 +119,119 @@ def apply_structured_pairing(
     kmat = jnp.asarray(sp.Kmat, dtype=x.dtype)
     w_res = jnp.asarray(sp.W_res, dtype=x.dtype)
     return paired_matmul(xp, kmat, w_res, **kw)
+
+
+# ---------------------------------------------------------------------------
+# differentiable fused dense: Pallas forward, XLA backward
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_dense_grad(activation, block_m, block_n, block_k, interpret):
+    """custom_vjp wrapper: forward through the fused kernel, backward as
+    plain XLA dots (pallas_call has no transpose rule; the backward of a
+    GEMM is two GEMMs XLA already schedules well, with the pre-activation
+    rematerialised — standard remat trade)."""
+    from repro.kernels.paired_matmul import ACTIVATIONS
+
+    def primal(x, w, b):
+        return dense_matmul(
+            x, w, b, activation=activation,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+
+    @jax.custom_vjp
+    def f(x, w, b):
+        return primal(x, w, b)
+
+    def fwd(x, w, b):
+        return primal(x, w, b), (x, w, b)
+
+    def bwd(res, dy):
+        x, w, b = res
+        z = jnp.einsum("...d,df->...f", x, w)
+        if b is not None:
+            z = z + b
+        _, act_vjp = jax.vjp(ACTIVATIONS[activation], z)
+        (dz,) = act_vjp(dy)
+        dx = jnp.einsum("...f,df->...d", dz, w)
+        dw = jnp.einsum("...d,...f->df", x, dz)
+        db = None if b is None else dz.reshape(-1, dz.shape[-1]).sum(0)
+        return dx, dw.astype(w.dtype), db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fused_dense(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    activation: str = "none",
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Differentiable fused GEMM: what layers.dense calls under the policy."""
+    grad_fn = _fused_dense_grad(activation, block_m, block_n, block_k, interpret)
+    return grad_fn(x, w, bias)
+
+
+# ---------------------------------------------------------------------------
+# GEMM policy: route model-layer matmuls through the fused kernels
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPolicy:
+    """Tile sizes + backend choice for layer GEMMs (0 → tuning heuristic)."""
+
+    block_m: int = 0
+    block_n: int = 0
+    block_k: int = 0
+    interpret: bool | None = None
+
+
+_policy_state = threading.local()
+
+
+def current_gemm_policy() -> GemmPolicy | None:
+    return getattr(_policy_state, "policy", None)
+
+
+@contextlib.contextmanager
+def pallas_gemm(
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+):
+    """Route :func:`repro.models.layers.dense` through the Pallas kernels.
+
+    Thread-local, like :func:`repro.parallel.sharding.activate`; wrap the
+    ``jax.jit`` trace (or the eager call) of a step to take effect.
+    """
+    prev = current_gemm_policy()
+    _policy_state.policy = GemmPolicy(block_m, block_n, block_k, interpret)
+    try:
+        yield
+    finally:
+        _policy_state.policy = prev
+
+
+def gemm_context(knobs):
+    """Context manager for a PerfKnobs-like object (``gemm``/``block_*``).
+
+    ``knobs.gemm == "pallas"`` activates :func:`pallas_gemm` with the knob
+    tile sizes; anything else is a no-op (XLA einsum path).
+    """
+    if getattr(knobs, "gemm", "xla") == "pallas":
+        return pallas_gemm(
+            block_m=getattr(knobs, "block_m", 0),
+            block_n=getattr(knobs, "block_n", 0),
+            block_k=getattr(knobs, "block_k", 0),
+        )
+    return contextlib.nullcontext()

@@ -14,12 +14,36 @@ is expected *pre-permuted* to the ``[I | J | residual]`` layout
 (``StructuredPairing.perm()``); the permutation is free at deploy time
 because it folds into the previous layer's output projection.
 
-Tiling: grid over (M/bm, N/bn); each program loads its x row-block — the
-paired halves (bm, P) twice and the residual (bm, R) once — plus the
-matching (P, bn) / (R, bn) weight columns into VMEM, subtracts on the VPU,
-and runs two MXU dots with fp32 accumulation.  For every assigned
-architecture the full-K row block fits VMEM comfortably
-(largest: mistral d_model 12288 → ≤ 6.3 MB bf16 at bm=128).
+Kernel tiling
+=============
+The kernel runs on a three-dimensional grid ``(M/bm, N/bn, nk)`` with the
+contraction dimension innermost, so all k-steps of one output tile execute
+back-to-back on the same core:
+
+* each program loads a ``(bm, bk)`` activation tile and a ``(bk, bn)``
+  weight tile into VMEM — never a full-K row block.  That is what lets the
+  same kernel serve LeNet (K = 400) and the production configs the ROADMAP
+  names (mistral-large ``d_model`` 12288, d_ff 28672) without blowing the
+  ~16 MB VMEM budget;
+* partial products accumulate into a ``(bm, bn)`` **fp32 VMEM scratch**
+  accumulator, zero-initialised at ``k == 0`` and flushed to the output ref
+  at the last k-step (``jax.experimental.pallas`` revisits the same output
+  block for every k, so the flush races nothing);
+* the contraction axis is *segmented*: the first ``nkp`` k-steps walk the
+  paired lanes (subtract-then-MAC over ``Kmat``), the remaining ``nkr``
+  steps walk the residual lanes (plain MAC over ``W_res``).  Segment
+  boundaries are static, so ``pl.when`` predication costs one scalar compare
+  per step; block index maps clamp into their own segment.  ``P == 0`` or
+  ``R == 0`` simply drop a segment — the three historical ``pallas_call``
+  branches are now one parameterized builder (``_build_paired_call``);
+* the **epilogue is fused**: bias add and an optional activation
+  (relu / gelu / silu / tanh) happen on the fp32 accumulator right before
+  the flush, so downstream layers stop paying an extra HBM round-trip for
+  ``y + b`` / ``act(y)``.
+
+Per-segment k-tiles are padded with zero lanes up to a ``bk`` multiple;
+zero activation lanes × zero weight rows contribute nothing, so no masking
+is needed in the accumulation.
 
 ``interpret=True`` executes the same kernel body with jnp semantics on CPU —
 that is how the kernel is validated in this container (TPU is the target).
@@ -27,134 +51,272 @@ that is how the kernel is validated in this container (TPU is the target).
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Epilogue activations the kernel can fuse. "none" is the identity.
+ACTIVATIONS: dict[str, Callable] = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "swish": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
 
 
-def _paired_kernel(xi_ref, xj_ref, xr_ref, km_ref, wr_ref, o_ref):
-    """One (bm, bn) output tile: subtract-then-MAC + residual MAC."""
-    diff = (xi_ref[...] - xj_ref[...])  # VPU: (bm, P) — the paper's subtractor
-    acc = jnp.dot(diff, km_ref[...], preferred_element_type=jnp.float32)
-    acc += jnp.dot(xr_ref[...], wr_ref[...], preferred_element_type=jnp.float32)
-    o_ref[...] = acc.astype(o_ref.dtype)
+def _apply_epilogue(acc, bias_block, activation: str):
+    """Bias add + activation on the fp32 accumulator (pre-flush)."""
+    if bias_block is not None:
+        acc = acc + bias_block.astype(jnp.float32)
+    return ACTIVATIONS[activation](acc)
 
 
-def _paired_only_kernel(xi_ref, xj_ref, km_ref, o_ref):
-    diff = xi_ref[...] - xj_ref[...]
-    o_ref[...] = jnp.dot(
-        diff, km_ref[...], preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_to(arr: jax.Array, axis: int, size: int) -> jax.Array:
+    if arr.shape[axis] == size:
+        return arr
+    pads = [(0, 0)] * arr.ndim
+    pads[axis] = (0, size - arr.shape[axis])
+    return jnp.pad(arr, pads)
+
+
+def _build_paired_call(
+    *,
+    bm: int,
+    bn: int,
+    nkp: int,
+    bkp: int,
+    nkr: int,
+    bkr: int,
+    has_bias: bool,
+    activation: str,
+    Mp: int,
+    Np: int,
+    out_dtype,
+    interpret: bool,
+):
+    """One parameterized ``pallas_call`` covering all segment combinations.
+
+    The contraction grid has ``nkp`` paired k-steps followed by ``nkr``
+    residual k-steps; either count may be zero (but not both).  Inputs are
+    ordered ``[xi, xj, kmat][:has_pairs] + [xr, w_res][:has_resid] +
+    [bias][:has_bias]``.
+    """
+    has_pairs = nkp > 0
+    has_resid = nkr > 0
+    nk = nkp + nkr
+    assert nk > 0
+
+    # The TPU MXU multiplies bf16 operands at full product precision and
+    # accumulates fp32; XLA's *CPU* dot instead rounds each product to bf16.
+    # Interpret mode is the validation oracle, so upcast dot operands there
+    # to match the hardware semantics being modelled.
+    cast = (lambda a: a.astype(jnp.float32)) if interpret else (lambda a: a)
+
+    def sub(a, b):
+        # The paper's subtractor operates at *input* precision: for bf16
+        # inputs the difference is rounded to bf16 before it feeds the MXU.
+        # reduce_precision pins that rounding — XLA's excess-precision pass
+        # would otherwise elide the bf16 round-trip inside the fused kernel
+        # and silently diverge from the hardware dataflow (and from ref.py).
+        d = a - b
+        if interpret and d.dtype != jnp.float32:
+            info = jnp.finfo(d.dtype)
+            d = jax.lax.reduce_precision(
+                d.astype(jnp.float32), info.nexp, info.nmant
+            )
+        return d
+
+    def kernel(*refs):
+        refs = list(refs)
+        acc_ref = refs.pop()
+        o_ref = refs.pop()
+        b_ref = refs.pop() if has_bias else None
+        it = iter(refs)
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _zero():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        if has_pairs:
+            xi_ref, xj_ref, km_ref = next(it), next(it), next(it)
+
+            def paired_step():
+                # VPU subtract (the paper's subtractor) at input precision,
+                # then one MXU dot.
+                diff = sub(xi_ref[...], xj_ref[...])
+                acc_ref[...] += jnp.dot(
+                    cast(diff), cast(km_ref[...]),
+                    preferred_element_type=jnp.float32,
+                )
+
+            if has_resid:
+                pl.when(k < nkp)(paired_step)
+            else:
+                paired_step()
+        if has_resid:
+            xr_ref, wr_ref = next(it), next(it)
+
+            def resid_step():
+                acc_ref[...] += jnp.dot(
+                    cast(xr_ref[...]), cast(wr_ref[...]),
+                    preferred_element_type=jnp.float32,
+                )
+
+            if has_pairs:
+                pl.when(k >= nkp)(resid_step)
+            else:
+                resid_step()
+
+        @pl.when(k == nk - 1)
+        def _flush():
+            bias_block = b_ref[...] if has_bias else None
+            o_ref[...] = _apply_epilogue(
+                acc_ref[...], bias_block, activation
+            ).astype(o_ref.dtype)
+
+    # --- block specs: each segment's index map clamps into its own range ---
+    in_specs = []
+    if has_pairs:
+        pk = lambda m, n, k: (m, jnp.minimum(k, nkp - 1))
+        pw = lambda m, n, k: (jnp.minimum(k, nkp - 1), n)
+        in_specs += [
+            pl.BlockSpec((bm, bkp), pk),
+            pl.BlockSpec((bm, bkp), pk),
+            pl.BlockSpec((bkp, bn), pw),
+        ]
+    if has_resid:
+        rk = lambda m, n, k: (m, jnp.clip(k - nkp, 0, nkr - 1))
+        rw = lambda m, n, k: (jnp.clip(k - nkp, 0, nkr - 1), n)
+        in_specs += [
+            pl.BlockSpec((bm, bkr), rk),
+            pl.BlockSpec((bkr, bn), rw),
+        ]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
+
+    kwargs = {}
+    if not interpret:
+        # k must iterate sequentially per output tile (the accumulator
+        # carries across k-steps); m/n tiles are independent.
+        params_cls = getattr(pltpu, "TPUCompilerParams", None)
+        if params_cls is not None:
+            kwargs["compiler_params"] = params_cls(
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )
 
 
 def paired_matmul_pallas(
     x: jax.Array,  # (M, K) pre-permuted to [I | J | residual]
     kmat: jax.Array,  # (P, N) per-column pair magnitudes
     w_res: jax.Array,  # (R, N) residual weights, R = K - 2P
+    bias: jax.Array | None = None,  # (N,) fused epilogue bias
     *,
     block_m: int = 128,
     block_n: int = 128,
+    block_k: int = 512,
+    activation: str = "none",
     interpret: bool = True,
 ) -> jax.Array:
-    """Fused subtract-then-MAC GEMM. Returns (M, N) in x.dtype."""
+    """K-tiled fused subtract-then-MAC GEMM with epilogue. Returns (M, N).
+
+    The contraction over ``P`` paired lanes and ``R`` residual lanes is
+    tiled in ``block_k`` chunks with an fp32 VMEM accumulator (see the
+    module docstring, "Kernel tiling").
+    """
     M, K = x.shape
     P, N = kmat.shape
     R = w_res.shape[0]
     assert K == 2 * P + R, f"layout mismatch: K={K} vs 2P+R={2*P+R}"
-
-    bm = min(block_m, M)
-    bn = min(block_n, N)
-    # pad M/N up to tile multiples (pallas grids need exact tiling)
-    Mp = -(-M // bm) * bm
-    Np = -(-N // bn) * bn
-    if Mp != M:
-        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
-    if Np != N:
-        kmat = jnp.pad(kmat, ((0, 0), (0, Np - N)))
-        w_res = jnp.pad(w_res, ((0, 0), (0, Np - N)))
+    assert activation in ACTIVATIONS, f"unknown activation {activation!r}"
 
     xi = x[:, :P]
     xj = x[:, P : 2 * P]
     xr = x[:, 2 * P :]
 
-    grid = (Mp // bm, Np // bn)
-    if R == 0:
-        out = pl.pallas_call(
-            _paired_only_kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, P), lambda m, n: (m, 0)),
-                pl.BlockSpec((bm, P), lambda m, n: (m, 0)),
-                pl.BlockSpec((P, bn), lambda m, n: (0, n)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
-            out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-            interpret=interpret,
-        )(xi, xj, kmat)
-    elif P == 0:
-        # no pairs found — plain GEMM over the residual
-        out = pl.pallas_call(
-            _dense_kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, R), lambda m, n: (m, 0)),
-                pl.BlockSpec((R, bn), lambda m, n: (0, n)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
-            out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-            interpret=interpret,
-        )(xr, w_res)
-    else:
-        out = pl.pallas_call(
-            _paired_kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, P), lambda m, n: (m, 0)),
-                pl.BlockSpec((bm, P), lambda m, n: (m, 0)),
-                pl.BlockSpec((bm, R), lambda m, n: (m, 0)),
-                pl.BlockSpec((P, bn), lambda m, n: (0, n)),
-                pl.BlockSpec((R, bn), lambda m, n: (0, n)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
-            out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-            interpret=interpret,
-        )(xi, xj, xr, kmat, w_res)
+    if P + R == 0:
+        # degenerate zero-length contraction: epilogue only
+        y = jnp.zeros((M, N), jnp.float32)
+        b = None if bias is None else bias.astype(jnp.float32)[None]
+        return _apply_epilogue(y, b, activation).astype(x.dtype)
+
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    Mp = _ceil_to(M, bm)
+    Np = _ceil_to(N, bn)
+
+    # per-segment k tiles (each segment keeps its own block size ≤ block_k)
+    bkp = min(block_k, P) if P else 0
+    bkr = min(block_k, R) if R else 0
+    nkp = -(-P // bkp) if P else 0
+    nkr = -(-R // bkr) if R else 0
+
+    operands = []
+    if P:
+        Pp = nkp * bkp
+        operands += [
+            _pad_to(_pad_to(xi, 0, Mp), 1, Pp),
+            _pad_to(_pad_to(xj, 0, Mp), 1, Pp),
+            _pad_to(_pad_to(kmat, 0, Pp), 1, Np),
+        ]
+    if R:
+        Rp = nkr * bkr
+        operands += [
+            _pad_to(_pad_to(xr, 0, Mp), 1, Rp),
+            _pad_to(_pad_to(w_res, 0, Rp), 1, Np),
+        ]
+    if bias is not None:
+        operands.append(_pad_to(bias[None], 1, Np))
+
+    call = _build_paired_call(
+        bm=bm, bn=bn, nkp=nkp, bkp=bkp, nkr=nkr, bkr=bkr,
+        has_bias=bias is not None, activation=activation,
+        Mp=Mp, Np=Np, out_dtype=x.dtype, interpret=interpret,
+    )
+    out = call(*operands)
     return out[:M, :N]
-
-
-def _dense_kernel(x_ref, w_ref, o_ref):
-    o_ref[...] = jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
 
 
 def dense_matmul_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: jax.Array | None = None,
     *,
     block_m: int = 128,
     block_n: int = 128,
+    block_k: int = 512,
+    activation: str = "none",
     interpret: bool = True,
 ) -> jax.Array:
-    """Baseline GEMM with identical tiling (for like-for-like comparison)."""
-    M, K = x.shape
-    _, N = w.shape
-    bm, bn = min(block_m, M), min(block_n, N)
-    Mp, Np = -(-M // bm) * bm, -(-N // bn) * bn
-    if Mp != M:
-        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
-    if Np != N:
-        w = jnp.pad(w, ((0, 0), (0, Np - N)))
-    out = pl.pallas_call(
-        _dense_kernel,
-        grid=(Mp // bm, Np // bn),
-        in_specs=[
-            pl.BlockSpec((bm, K), lambda m, n: (m, 0)),
-            pl.BlockSpec((K, bn), lambda m, n: (0, n)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-        interpret=interpret,
-    )(x, w)
-    return out[:M, :N]
+    """Baseline K-tiled GEMM with identical tiling + epilogue fusion.
+
+    The degenerate single-segment case of the paired builder (P == 0):
+    like-for-like comparison baseline and the serving fast path for
+    unpaired layers.
+    """
+    P0 = jnp.zeros((0, w.shape[1]), w.dtype)
+    return paired_matmul_pallas(
+        x, P0, w, bias,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        activation=activation, interpret=interpret,
+    )

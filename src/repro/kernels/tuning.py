@@ -1,0 +1,139 @@
+"""Heuristic tile-size chooser for the paired / dense Pallas GEMMs.
+
+The kernel's VMEM working set per program is
+
+    xi (bm·bk) + xj (bm·bk)            [paired segment]
+  + xr (bm·bk)                         [residual segment]
+  + kmat / w_res (bk·bn)               [weight tile per live segment]
+  + acc (bm·bn fp32) + out (bm·bn)
+
+all times the element size, with double-buffering on the streamed inputs
+(the Pallas pipeline prefetches the next k-tile while the current one
+computes).  ``choose_blocks`` picks the largest ``block_k`` that keeps that
+under a conservative VMEM budget at (128, 128) output tiles — the MXU-native
+tile — shrinking ``block_m``/``block_n`` only for small problems.
+
+This is a *heuristic*, not an autotuner: it exists so that callers (serving
+knobs, benchmarks, tests) get a safe default for any (M, N, K) without
+hand-picking; the benchmark sweep in ``benchmarks/roofline.py`` is the tool
+for measuring where the heuristic leaves performance on the table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Usable VMEM budget per core: ~16 MB physical, keep headroom for the
+# compiler's own buffers and semaphores.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+# Lane/sublane-friendly candidates, largest first.
+_BLOCK_K_CANDIDATES = (2048, 1024, 512, 256, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    block_m: int
+    block_n: int
+    block_k: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def kernel_vmem_bytes(
+    bm: int,
+    bn: int,
+    bk: int,
+    *,
+    dtype_bytes: int = 2,
+    has_pairs: bool = True,
+    has_resid: bool = True,
+    double_buffer: bool = True,
+) -> int:
+    """Estimated VMEM working set of one program of the paired kernel."""
+    streams = 0
+    if has_pairs:
+        streams += 2 * bm * bk + bk * bn  # xi, xj, kmat tiles
+    if has_resid:
+        streams += bm * bk + bk * bn  # xr, w_res tiles
+    buf = 2 if double_buffer else 1
+    fixed = bm * bn * 4 + bm * bn * dtype_bytes  # fp32 acc + out tile
+    return buf * streams * dtype_bytes + fixed
+
+
+def _round_up_pow2(x: int, cap: int) -> int:
+    p = 1
+    while p < x and p < cap:
+        p *= 2
+    return min(p, cap)
+
+
+def choose_blocks(
+    M: int,
+    N: int,
+    P: int,
+    R: int = 0,
+    *,
+    dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> TileConfig:
+    """Pick (block_m, block_n, block_k) for a paired GEMM of the given shape.
+
+    ``P`` paired lanes + ``R`` residual lanes (pass ``P=0`` for a plain
+    dense GEMM of contraction length ``R``).
+    """
+    K_eff = max(P, R, 1)
+    bm = _round_up_pow2(M, 128)
+    bn = _round_up_pow2(N, 128)
+    has_pairs, has_resid = P > 0, R > 0
+
+    for bk in _BLOCK_K_CANDIDATES:
+        if bk > K_eff and bk != _BLOCK_K_CANDIDATES[-1]:
+            continue
+        bk_eff = min(bk, K_eff)
+        if (
+            kernel_vmem_bytes(
+                bm, bn, bk_eff,
+                dtype_bytes=dtype_bytes,
+                has_pairs=has_pairs, has_resid=has_resid,
+            )
+            <= vmem_budget
+        ):
+            return TileConfig(bm, bn, min(bk, K_eff))
+
+    # fall back to shrinking the output tile until the smallest k-tile fits
+    bk = min(_BLOCK_K_CANDIDATES[-1], K_eff)
+    while bm * bn > 8 * 8 and (
+        kernel_vmem_bytes(
+            bm, bn, bk,
+            dtype_bytes=dtype_bytes,
+            has_pairs=has_pairs, has_resid=has_resid,
+        )
+        > vmem_budget
+    ):
+        if bm >= bn:
+            bm //= 2
+        else:
+            bn //= 2
+    return TileConfig(max(bm, 8), max(bn, 8), bk)
+
+
+def resolve_blocks(
+    M: int,
+    N: int,
+    P: int,
+    R: int,
+    *,
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    dtype_bytes: int = 2,
+) -> TileConfig:
+    """Fill any zero block size from the heuristic (explicit values win)."""
+    if block_m and block_n and block_k:
+        return TileConfig(block_m, block_n, block_k)
+    auto = choose_blocks(M, N, P, R, dtype_bytes=dtype_bytes)
+    return TileConfig(
+        block_m or auto.block_m,
+        block_n or auto.block_n,
+        block_k or auto.block_k,
+    )

@@ -35,7 +35,8 @@ from repro.launch.inputs import batch_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import wire_cell
 from repro.models.lm import PerfKnobs
-from repro.parallel.hlo import analyze
+from repro.parallel.hlo import analyze, xla_cost_analysis
+from repro.parallel.sharding import set_mesh_compat
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
 
@@ -79,14 +80,14 @@ def run_cell(
             mode=shape.kind,
             knobs=knobs,
         )
-        with jax.set_mesh(mesh):
+        with set_mesh_compat(mesh):
             lowered = cell.lower()
             t_lower = time.time() - t0
             compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = xla_cost_analysis(compiled)
         hlo = compiled.as_text()
         # trip-count-aware HLO accounting (xla cost_analysis counts scan
         # bodies once — see parallel/hlo.py)

@@ -18,13 +18,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.sharding import make_mesh_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -31,6 +31,11 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--paired-rounding", type=float, default=0.0)
+    ap.add_argument("--gemm", choices=("xla", "pallas"), default="xla",
+                    help="route layer GEMMs through the fused K-tiled "
+                         "Pallas kernel (interpret mode off-TPU)")
+    ap.add_argument("--block-k", type=int, default=0,
+                    help="Pallas GEMM k-tile; 0 → kernels.tuning heuristic")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -42,7 +47,8 @@ def main() -> None:
               f"({100*report.pair_fraction:.1f}% of weights) → modeled "
               f"power −{100*s['power_saving']:.1f}%, area −{100*s['area_saving']:.1f}%")
 
-    knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none")
+    knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none",
+                        gemm=args.gemm, block_k=args.block_k)
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, batch_size=args.batch, knobs=knobs)
     rng = np.random.default_rng(0)
     prompts = {

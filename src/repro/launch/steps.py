@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.ops import gemm_context
 from repro.launch.inputs import batch_logical_axes, batch_specs
 from repro.launch.mesh import data_axes
 from repro.models import lm as M
@@ -83,10 +84,14 @@ def opt_state_axes(param_axes, opt_state_shapes):
 
 
 def build_train_step(cfg: ModelConfig, opt: Optimizer, knobs: M.PerfKnobs, mesh, rules: Rules):
-    """Returns train_step(params, opt_state, step, batch) -> (params', opt', metrics)."""
+    """Returns train_step(params, opt_state, step, batch) -> (params', opt', metrics).
+
+    ``knobs.gemm == "pallas"`` traces the step with the fused Pallas GEMM
+    policy active (see kernels.ops.gemm_context), baking the K-tiled
+    kernels into the compiled step."""
 
     def train_step(params, opt_state, step, batch):
-        with activate(mesh, rules):
+        with activate(mesh, rules), gemm_context(knobs):
             (loss, metrics), grads = jax.value_and_grad(
                 lambda p: M.lm_loss(cfg, p, batch, knobs=knobs), has_aux=True
             )(params)
@@ -98,16 +103,17 @@ def build_train_step(cfg: ModelConfig, opt: Optimizer, knobs: M.PerfKnobs, mesh,
 
 def build_prefill_step(cfg: ModelConfig, knobs: M.PerfKnobs, mesh, rules: Rules):
     def prefill_step(params, batch):
-        with activate(mesh, rules):
+        with activate(mesh, rules), gemm_context(knobs):
             logits, cache = M.prefill(cfg, params, batch, knobs=knobs)
         return logits, cache
 
     return prefill_step
 
 
-def build_serve_step(cfg: ModelConfig, mesh, rules: Rules):
+def build_serve_step(cfg: ModelConfig, mesh, rules: Rules,
+                     knobs: M.PerfKnobs = M.DEFAULT_KNOBS):
     def serve_step(params, cache, batch):
-        with activate(mesh, rules):
+        with activate(mesh, rules), gemm_context(knobs):
             logits, new_cache = M.decode_step(
                 cfg, params, cache, batch["tokens"], batch["pos"]
             )
@@ -193,7 +199,7 @@ def wire_cell(
         p_shard = shardings_for(param_axes, mesh, rules, param_shapes)
         cache_shapes, cache_axes = abstract_cache(cfg, global_batch, seq_len)
         c_shard = shardings_for(cache_axes, mesh, rules, cache_shapes)
-        step_fn = build_serve_step(cfg, mesh, rules)
+        step_fn = build_serve_step(cfg, mesh, rules, knobs)
         bspecs = batch_specs(cfg, global_batch, seq_len, "decode")
         bshard = batch_shardings("decode", bspecs)
         jitted = jax.jit(

@@ -33,7 +33,7 @@ from repro.launch.steps import build_train_step
 from repro.models import lm as M
 from repro.models.param import unzip
 from repro.parallel.rules import rules_for
-from repro.parallel.sharding import shardings_for
+from repro.parallel.sharding import make_mesh_compat, set_mesh_compat, shardings_for
 from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.train.optimizer import adamw, cosine_schedule
 
@@ -60,11 +60,9 @@ def main() -> None:
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split("x"))
         names = ("data", "model")[: len(shape)]
-        mesh = jax.make_mesh(shape, names,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        mesh = make_mesh_compat(shape, names)
     else:
-        mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((jax.device_count(), 1), ("data", "model"))
     rules = rules_for(cfg, "train", mesh)
 
     tree = M.init_lm(cfg, jax.random.key(0))
@@ -97,7 +95,7 @@ def main() -> None:
 
     data = token_batches(args.batch, args.seq, cfg.vocab, seed=1, start_step=start)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         for i, (tok, lab) in enumerate(data, start=start):
             if i >= args.steps:
                 break

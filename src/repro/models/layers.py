@@ -98,6 +98,34 @@ def activation(name: str, x: jax.Array) -> jax.Array:
     return jax.nn.silu(x) if name == "silu" else jax.nn.gelu(x)
 
 
+def dense(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+          act: str | None = None) -> jax.Array:
+    """GEMM over the last axis with optional bias + activation.
+
+    The single dispatch point between the XLA einsum path (default) and the
+    K-tiled, epilogue-fused Pallas kernels: when a
+    :func:`repro.kernels.ops.pallas_gemm` policy is active (serving engine /
+    step builders with ``PerfKnobs(gemm="pallas")``), the matmul, bias add
+    and activation all run inside one kernel and skip the extra HBM
+    round-trip.
+    """
+    from repro.kernels import ops as kops
+
+    pol = kops.current_gemm_policy()
+    if pol is not None:
+        return kops.fused_dense(
+            x, w, bias, activation=act or "none",
+            block_m=pol.block_m, block_n=pol.block_n, block_k=pol.block_k,
+            interpret=pol.interpret,
+        )
+    y = jnp.einsum("...d,df->...f", x, w)
+    if bias is not None:
+        y = y + bias
+    if act:
+        y = activation(act, y)
+    return y
+
+
 # ---------------------------------------------------------------------------
 # flash attention (blocked online softmax, pure JAX)
 # ---------------------------------------------------------------------------
@@ -467,10 +495,10 @@ def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
 
 def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     cdt = x.dtype
-    g = activation(cfg.act, jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cdt)))
-    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt))
+    g = dense(x, p["w_gate"].astype(cdt), act=cfg.act)
+    u = dense(x, p["w_up"].astype(cdt))
     h = constrain(g * u, "batch", None, "ff")
-    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cdt))
+    return dense(h, p["w_down"].astype(cdt))
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,11 @@ class PerfKnobs:
     attn_fused: bool = False  # account flash-attention interiors as
     # VMEM-resident (the validated Pallas kernel replaces them on TPU);
     # launch/dryrun then adds the kernel's boundary HBM traffic analytically
+    gemm: str = "xla"  # "xla" | "pallas" — route layer GEMMs (layers.dense)
+    # through the K-tiled epilogue-fused Pallas kernel instead of XLA einsums
+    block_m: int = 0  # Pallas GEMM tile sizes; 0 → kernels.tuning heuristic
+    block_n: int = 0
+    block_k: int = 0
 
 
 DEFAULT_KNOBS = PerfKnobs()

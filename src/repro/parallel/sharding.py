@@ -26,7 +26,46 @@ import threading
 from typing import Any, Mapping, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_mesh_compat(axis_shapes, axis_names, *, explicit: bool = False) -> Mesh:
+    """``jax.make_mesh`` across JAX versions.
+
+    Newer JAX grew ``jax.sharding.AxisType`` and a ``make_mesh(...,
+    axis_types=...)`` parameter; the pinned JAX here has neither.  Feature-
+    detect both and fall back to plain ``Mesh`` construction so callers
+    (tests, launch scripts) never touch ``jax.sharding.AxisType`` directly.
+    """
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and hasattr(jax, "make_mesh"):
+        kind = axis_type.Explicit if explicit else axis_type.Auto
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=(kind,) * len(axis_names)
+            )
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names)
+    n = int(np.prod(axis_shapes))
+    devices = np.asarray(jax.devices()[:n]).reshape(axis_shapes)
+    return Mesh(devices, axis_names)
+
+
+def set_mesh_compat(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` across JAX versions.
+
+    Newer JAX installs the mesh via ``jax.set_mesh``; on the pinned JAX the
+    ``Mesh`` object itself is the context manager with the same effect for
+    everything this repo does (jit with NamedShardings + shard_map).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 # Resolution priority: earlier names win a contested mesh axis.

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.ops import gemm_context
 from repro.models import lm as M
 from repro.models.param import unzip
 
@@ -37,12 +38,20 @@ class ServeEngine:
         self.pos = jnp.zeros((self.batch_size,), jnp.int32)
         self.tokens = jnp.zeros((self.batch_size, 1), jnp.int32)
         self.active = np.zeros((self.batch_size,), bool)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_step(self.cfg, p, c, t, pos)
-        )
-        self._prefill = jax.jit(
-            lambda p, b: M.prefill(self.cfg, p, b, knobs=self.knobs)
-        )
+
+        # knobs.gemm == "pallas" routes every layers.dense GEMM in the traced
+        # step through the fused K-tiled kernel (the policy is consulted at
+        # trace time, so it must wrap the function body, not the jit call).
+        def decode_fn(p, c, t, pos):
+            with gemm_context(self.knobs):
+                return M.decode_step(self.cfg, p, c, t, pos)
+
+        def prefill_fn(p, b):
+            with gemm_context(self.knobs):
+                return M.prefill(self.cfg, p, b, knobs=self.knobs)
+
+        self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn)
 
     # -- request management -------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray, extras: dict | None = None):

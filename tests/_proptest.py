@@ -1,0 +1,68 @@
+"""Tiny vendored property-test helper — a zero-dependency stand-in for the
+slice of ``hypothesis`` this suite used (``@given`` + integer/float
+strategies).
+
+``hypothesis`` is not installable in the hermetic test container (no
+network), so tests draw their random cases from a seeded generator instead:
+
+    from _proptest import cases, integers, floats
+
+    @cases(30, k=integers(1, 60), rounding=floats(0.0, 0.5), seed=seeds())
+    def test_something(k, rounding, seed): ...
+
+Each ``cases(n, name=strategy, ...)`` decorator expands into a plain
+``pytest.mark.parametrize`` with ``n`` tuples drawn up front from a
+``numpy`` Generator seeded by a stable hash of the test name — so case sets
+are reproducible across runs/processes (no ``PYTHONHASHSEED`` dependence),
+failures replay as ordinary parametrized tests, and ``-k`` selection works.
+No shrinking: cases are independent draws, and the draw that failed is
+printed in the test id.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable
+
+import numpy as np
+import pytest
+
+Strategy = Callable[[np.random.Generator], object]
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    """Uniform integer in [min_value, max_value] (inclusive, like hypothesis)."""
+    return lambda rng: int(rng.integers(min_value, max_value + 1))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    """Uniform float in [min_value, max_value]."""
+    return lambda rng: float(rng.uniform(min_value, max_value))
+
+
+def seeds() -> Strategy:
+    """A fresh RNG seed per case (the usual 'seed' argument strategy)."""
+    return integers(0, 2**31 - 1)
+
+
+def sampled_from(options) -> Strategy:
+    opts = list(options)
+    return lambda rng: opts[int(rng.integers(len(opts)))]
+
+
+def cases(n_cases: int, /, **strategies: Strategy):
+    """Draw ``n_cases`` tuples from keyword strategies; parametrize the test.
+
+    Keyword names must match the test's parameter names (order preserved).
+    """
+
+    def deco(fn):
+        seed = zlib.crc32(fn.__name__.encode())
+        rng = np.random.default_rng(seed)
+        names = list(strategies)
+        values = [
+            tuple(strategies[name](rng) for name in names)
+            for _ in range(n_cases)
+        ]
+        return pytest.mark.parametrize(",".join(names), values)(fn)
+
+    return deco

@@ -1,0 +1,14 @@
+"""Make ``python -m pytest`` work with no PYTHONPATH setup.
+
+The package lives under ``src/`` (src-layout without an installed dist), so
+insert it on ``sys.path`` before test collection imports ``repro``.  Also
+puts ``tests/`` itself on the path so the vendored ``_proptest`` helper
+imports from any working directory.
+"""
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT / "src"), str(_ROOT / "tests")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

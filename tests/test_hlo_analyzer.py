@@ -5,13 +5,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.parallel.hlo import analyze, parse_hlo
+from repro.parallel.hlo import analyze, parse_hlo, xla_cost_analysis
 
 
 def _compile_text(fn, *args):
     lowered = jax.jit(fn).lower(*args)
     compiled = lowered.compile()
-    return compiled.as_text(), compiled.cost_analysis()
+    # xla_cost_analysis normalizes the list-of-dicts return of older JAX
+    return compiled.as_text(), xla_cost_analysis(compiled)
 
 
 def test_matmul_flops_match_xla():

@@ -1,7 +1,8 @@
 """Tests for the paper's Algorithm 1 and its vectorised / structured variants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _proptest import cases, floats, integers, seeds
 
 from repro.core.pairing import (
     pair_list_twopointer,
@@ -60,13 +61,7 @@ def test_every_weight_accounted_once():
     assert sorted(touched.tolist()) == list(range(301))
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    st.integers(min_value=1, max_value=60),
-    st.integers(min_value=1, max_value=8),
-    st.floats(min_value=0.0, max_value=0.5),
-    st.integers(min_value=0, max_value=2**31 - 1),
-)
+@cases(30, k=integers(1, 60), n=integers(1, 8), rounding=floats(0.0, 0.5), seed=seeds())
 def test_pair_columns_matches_twopointer_oracle(k, n, rounding, seed):
     """The vectorised per-column pairing is bit-identical to Algorithm 1."""
     rng = np.random.default_rng(seed)
@@ -82,13 +77,7 @@ def test_pair_columns_matches_twopointer_oracle(k, n, rounding, seed):
             np.testing.assert_allclose(cp.pair_mag[: got, col], ref.pair_mag)
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    st.integers(min_value=2, max_value=40),
-    st.integers(min_value=1, max_value=6),
-    st.floats(min_value=1e-4, max_value=0.3),
-    st.integers(min_value=0, max_value=2**31 - 1),
-)
+@cases(20, k=integers(2, 40), n=integers(1, 6), rounding=floats(1e-4, 0.3), seed=seeds())
 def test_fold_error_bounded_by_half_rounding(k, n, rounding, seed):
     """Snapping both pair members to k=(|a|+|b|)/2 perturbs each weight by
     at most rounding/2 — the accuracy knob the paper advertises."""
@@ -153,13 +142,7 @@ def test_structured_partition_is_exact():
     assert sorted(perm.tolist()) == list(range(64))
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    st.integers(min_value=2, max_value=64),
-    st.integers(min_value=1, max_value=8),
-    st.floats(min_value=1e-3, max_value=0.5),
-    st.integers(min_value=0, max_value=2**31 - 1),
-)
+@cases(20, k=integers(2, 64), n=integers(1, 8), rounding=floats(1e-3, 0.5), seed=seeds())
 def test_structured_fold_error_bound(k, n, rounding, seed):
     """Structured pairing drops only the symmetric part s with rms(s) < r/…
     — elementwise error of the folded matrix is bounded by the criterion."""

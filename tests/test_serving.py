@@ -34,6 +34,24 @@ def test_greedy_generation_matches_teacher_forcing(arch):
     np.testing.assert_array_equal(np.asarray(gen), ref[: len(gen)])
 
 
+def test_pallas_gemm_knob_matches_xla_path():
+    """PerfKnobs(gemm="pallas") must not change greedy decode output — the
+    fused K-tiled kernel path and the XLA einsum path are the same math."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(2)))
+    base = dict(q_chunk=16, k_chunk=16, remat="none")
+    eng_xla = ServeEngine(cfg, params, max_seq=32, batch_size=1,
+                          knobs=M.PerfKnobs(**base))
+    eng_pls = ServeEngine(cfg, params, max_seq=32, batch_size=1,
+                          knobs=M.PerfKnobs(**base, gemm="pallas",
+                                            block_m=16, block_n=32, block_k=32))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    out_xla = eng_xla.generate({0: prompt}, n_steps=4)
+    out_pls = eng_pls.generate({0: prompt}, n_steps=4)
+    assert out_xla[0] == out_pls[0]
+
+
 def test_two_slot_batch_decodes_independently():
     cfg = get_smoke_config("qwen2-1.5b")
     params, _ = unzip(M.init_lm(cfg, jax.random.key(1)))
