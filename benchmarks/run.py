@@ -1,37 +1,54 @@
 """Benchmark harness: one module per paper table/figure + the beyond-paper
 and roofline benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 
 Order: the LeNet benches reproduce the paper's own artifacts (Table I,
 Fig. 8 incl. Fig. 3/4 weight-distribution stats); pairing_rate_lm extends
 the technique to the ten assigned architectures; roofline assembles the
 dry-run results (run `python -m repro.launch.dryrun` first for fresh cells).
+
+Exit code is nonzero when any selected bench fails — CI's smoke job depends
+on that (a green run must mean every bench actually succeeded).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 import traceback
 
 from benchmarks import fig8, pairing_rate_lm, roofline, table1
 
 BENCHES = [
-    ("table1 (paper Table I)", table1.run),
-    ("fig8 (paper Fig. 8 + Fig. 3/4)", fig8.run),
-    ("pairing_rate_lm (beyond paper)", pairing_rate_lm.run),
-    ("roofline (dry-run analysis)", roofline.run),
+    ("table1", "paper Table I", table1.run),
+    ("fig8", "paper Fig. 8 + Fig. 3/4", fig8.run),
+    ("pairing_rate_lm", "beyond paper", pairing_rate_lm.run),
+    ("roofline", "dry-run analysis", roofline.run),
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument(
+        "--only", action="append", default=None, metavar="NAME",
+        help="run only the named bench (repeatable; for CI sharding): "
+             + ", ".join(name for name, _, _ in BENCHES),
+    )
+    args = ap.parse_args(argv)
+
+    selected = BENCHES
+    if args.only:
+        known = {name for name, _, _ in BENCHES}
+        unknown = sorted(set(args.only) - known)
+        if unknown:
+            ap.error(f"unknown bench name(s) {unknown}; choose from {sorted(known)}")
+        selected = [b for b in BENCHES if b[0] in args.only]
 
     results = {}
-    for name, fn in BENCHES:
-        print(f"\n{'='*70}\n== {name}\n{'='*70}")
+    for name, desc, fn in selected:
+        print(f"\n{'='*70}\n== {name} ({desc})\n{'='*70}")
         t0 = time.time()
         try:
             results[name] = fn(quick=args.quick)
@@ -41,8 +58,9 @@ def main() -> None:
             traceback.print_exc()
             results[name] = {"error": str(e)}
     n_fail = sum(1 for v in results.values() if "error" in v)
-    print(f"\n[benchmarks] {len(BENCHES) - n_fail}/{len(BENCHES)} benches succeeded")
+    print(f"\n[benchmarks] {len(selected) - n_fail}/{len(selected)} benches succeeded")
+    return 1 if n_fail else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

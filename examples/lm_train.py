@@ -8,7 +8,6 @@ has learnable bigram structure.
 Run:  PYTHONPATH=src python examples/lm_train.py [--steps 300]
 """
 import argparse
-import dataclasses
 import time
 
 import jax

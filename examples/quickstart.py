@@ -6,7 +6,6 @@ the TPU-native structured variant evaluating through the Pallas kernel.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

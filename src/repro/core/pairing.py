@@ -150,8 +150,6 @@ def pair_columns(W: np.ndarray, rounding: float) -> ColumnPairing:
     # argsort the full columns, then compact the signed entries to the top.
     order = np.argsort(W, axis=0, kind="stable")  # ascending values
     Ws = np.take_along_axis(W, order, axis=0)
-    for n in range(0):  # pragma: no cover - placeholder to keep lints quiet
-        pass
     # positives: ascending slice of sorted column (they are at the bottom end)
     # Build scatter indices vectorised:
     col_ids = np.broadcast_to(np.arange(N), (K, N))
@@ -162,7 +160,6 @@ def pair_columns(W: np.ndarray, rounding: float) -> ColumnPairing:
     pos_vals[rank_pos[sel], col_ids[sel]] = Ws[sel]
     pos_rows[rank_pos[sel], col_ids[sel]] = order[sel]
     # negatives: |.| ascending == value descending
-    is_neg = Ws < 0
     desc = Ws[::-1]
     order_desc = order[::-1]
     is_neg_d = desc < 0

@@ -80,6 +80,85 @@ class PairedModelReport:
         }
 
 
+@dataclasses.dataclass
+class PairedLayer:
+    """Per-conv-layer deployment artifact for the Pallas paired-conv path.
+
+    Produced offline by :func:`build_conv_pairings` (the paper's one-time
+    weight preprocessing), consumed at inference by
+    ``kernels.paired_conv.paired_conv`` — the pairing carries only the *index
+    structure* (which patch lanes subtract); magnitudes are recomputed from
+    the live weights inside the traced forward, so the artifact stays valid
+    under ``jax.grad`` and after weight updates.
+    """
+
+    name: str
+    kernel_shape: tuple[int, ...]  # (kh, kw, cin, cout)
+    rounding: float
+    pairing: StructuredPairing
+    positions: int = 1  # output spatial positions per image (conv M-dim)
+
+    @property
+    def n_pairs(self) -> int:
+        return self.pairing.n_pairs
+
+    def measured_op_counts(self) -> dict[str, int]:
+        """What the paired kernel *executes* per inference image.
+
+        Baseline MXU lanes equal the paper's multiply count for the layer
+        (K·N·positions); every shared pair removes one contraction lane for
+        all N output channels and runs one VPU subtract per position.
+        """
+        kh, kw, cin, cout = self.kernel_shape
+        K, N = kh * kw * cin, cout
+        P = self.n_pairs
+        return {
+            "baseline_lanes": K * N * self.positions,
+            "paired_lanes": (K - P) * N * self.positions,
+            "lanes_saved": P * N * self.positions,
+            "subs_executed": P * self.positions,
+        }
+
+
+def build_conv_pairings(
+    params: Any,
+    rounding: float,
+    *,
+    positions: dict[str, int] | None = None,
+    criterion: str = "rms",
+) -> dict[str, PairedLayer]:
+    """Emit a :class:`PairedLayer` artifact for every conv leaf of ``params``.
+
+    ``params`` is a ``{layer_name: {"w": (kh, kw, cin, cout), ...}}`` tree
+    (the LeNet layout); each 4-D float ``w`` is flattened to the im2col GEMM
+    matrix (K, N) and paired with the structured (shared-row) pairing the
+    Pallas kernel consumes.  ``positions`` maps layer names to output spatial
+    positions (e.g. ``models.lenet.LENET_CONV_POSITIONS``) so the artifacts
+    can report measured per-image op counts.
+    """
+    arts: dict[str, PairedLayer] = {}
+    for name, leaf in params.items():
+        if not isinstance(leaf, dict) or "w" not in leaf:
+            continue
+        w = np.asarray(leaf["w"])
+        if w.ndim != 4 or w.dtype.kind != "f":
+            continue
+        kh, kw, cin, cout = w.shape
+        sp = pair_rows_structured(
+            w.reshape(kh * kw * cin, cout).astype(np.float64),
+            rounding,
+            criterion=criterion,
+        )
+        arts[name] = PairedLayer(
+            name=name,
+            kernel_shape=tuple(w.shape),
+            rounding=rounding,
+            pairing=sp,
+            positions=(positions or {}).get(name, 1),
+        )
+    return arts
+
+
 def _path_str(path: Any) -> str:
     return jax.tree_util.keystr(path)
 

@@ -10,9 +10,14 @@ tuning.py the heuristic tile chooser; ref.py the pure-jnp oracles.
 """
 
 from repro.kernels.ops import (  # noqa: F401
+    conv_context,
     dense_matmul,
     gemm_context,
     paired_matmul,
+    pallas_conv,
     pallas_gemm,
+    perf_context,
 )
+from repro.kernels.im2col import col2im, im2col  # noqa: F401
+from repro.kernels.paired_conv import conv_im2col, paired_conv  # noqa: F401
 from repro.kernels.tuning import TileConfig, choose_blocks  # noqa: F401

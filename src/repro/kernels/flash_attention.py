@@ -44,9 +44,8 @@ def _flash_fwd_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # causal bound: the last kv block this q block attends to
-    run = (not causal) or True  # static; dynamic skip below
-
+    # causal bound: the last kv block this q block attends to is skipped
+    # statically via pl.when below
     @pl.when((not causal) or (ki * k_chunk <= (qi + 1) * q_chunk - 1))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)  # (q_chunk, D)

@@ -1,0 +1,85 @@
+"""im2col: lower a convolution to the GEMM the paired kernel understands.
+
+The paper's accelerator applies the subtractor datapath *during convolution*
+(eq. 1 operates on two input pixels feeding the same output value).  On the
+TPU the analogous lowering is im2col: extract every (kh, kw, cin) receptive
+field as one row of a patch matrix, so the conv becomes
+
+    y[n, oh, ow, :] = patches[n, oh, ow, :] @ W.reshape(kh*kw*cin, cout)
+
+and the paired GEMM kernel (kernels/paired_matmul.py) runs unchanged on the
+patch rows — pairs of *patch lanes* subtract exactly like pairs of input
+channels do for a dense layer.
+
+Layout contract: NHWC activations, HWIO weights, VALID padding, stride 1
+(LeNet-5's convs; the only conv geometry the paper evaluates).  The patch
+axis is ordered (kh, kw, cin) row-major, i.e. exactly the order of
+``w.reshape(kh*kw*cin, cout)`` — so conv weights flatten to the GEMM weight
+matrix with a plain reshape, no transpose.
+
+The extraction itself is ``kh*kw`` shifted views concatenated on the channel
+axis: pure strided slices, which XLA fuses and Pallas BlockSpecs can index —
+no scatter/gather tables.  ``col2im`` is the exact adjoint (overlap-add),
+which is what makes the conv path differentiable end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_output_hw(h: int, w: int, kh: int, kw: int) -> tuple[int, int]:
+    """Output spatial dims of a VALID, stride-1 conv."""
+    oh, ow = h - kh + 1, w - kw + 1
+    assert oh > 0 and ow > 0, f"kernel ({kh},{kw}) larger than input ({h},{w})"
+    return oh, ow
+
+
+def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Extract patches: (N, H, W, C) → (N, OH, OW, kh*kw*C).
+
+    Row layout of the last axis is (kh, kw, cin) row-major, matching
+    ``w.reshape(kh*kw*cin, cout)`` for HWIO conv weights.
+    """
+    n, h, w, c = x.shape
+    oh, ow = conv_output_hw(h, w, kh, kw)
+    del n, c
+    views = [
+        x[:, i : i + oh, j : j + ow, :] for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(views, axis=-1)
+
+
+def col2im(
+    cols: jax.Array, x_shape: tuple[int, int, int, int], kh: int, kw: int
+) -> jax.Array:
+    """Adjoint of :func:`im2col`: overlap-add patches back to image shape.
+
+    cols: (N, OH, OW, kh*kw*C) → (N, H, W, C).  Satisfies
+    ``<im2col(x), y> == <x, col2im(y)>`` exactly, so it is the VJP of the
+    patch extraction (used by the paired-conv backward pass).
+    """
+    n, h, w, c = x_shape
+    oh, ow = conv_output_hw(h, w, kh, kw)
+    del n
+    out = jnp.zeros(x_shape, cols.dtype)
+    idx = 0
+    for i in range(kh):
+        for j in range(kw):
+            out = out.at[:, i : i + oh, j : j + ow, :].add(
+                cols[..., idx * c : (idx + 1) * c]
+            )
+            idx += 1
+    return out
+
+
+def overlap_counts(
+    x_shape: tuple[int, int, int, int], kh: int, kw: int
+) -> jax.Array:
+    """How many patches cover each input pixel: col2im(im2col(1)) == counts.
+
+    Dividing by this normalises the round-trip back to the original image
+    (interior pixels are covered kh·kw times, borders fewer).
+    """
+    ones = jnp.ones(x_shape, jnp.float32)
+    return col2im(im2col(ones, kh, kw), x_shape, kh, kw)

@@ -25,7 +25,6 @@ import threading
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.pairing import StructuredPairing
 from repro.kernels import tuning
@@ -235,3 +234,80 @@ def gemm_context(knobs):
             block_k=getattr(knobs, "block_k", 0),
         )
     return contextlib.nullcontext()
+
+
+# ---------------------------------------------------------------------------
+# conv policy: route model convolutions through im2col / the paired kernel
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPolicy:
+    """Conv lowering choice + artifacts for :func:`repro.models.lenet.lenet_apply`.
+
+    ``impl`` is one of ``"xla"`` (lax.conv), ``"im2col"`` (patch GEMM via
+    XLA) or ``"pallas_paired"`` (patch GEMM through the paired kernel, which
+    additionally needs the per-layer ``paired`` artifacts from
+    :func:`repro.core.transform.build_conv_pairings`).
+    """
+
+    impl: str = "xla"
+    paired: object = None  # {layer_name: PairedLayer} for "pallas_paired"
+    block_m: int = 0
+    block_n: int = 0
+    block_k: int = 0
+    interpret: bool | None = None
+
+
+def current_conv_policy() -> ConvPolicy | None:
+    return getattr(_policy_state, "conv", None)
+
+
+@contextlib.contextmanager
+def pallas_conv(
+    impl: str = "pallas_paired",
+    paired=None,
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+):
+    """Thread-local conv policy, symmetric with :func:`pallas_gemm`.
+
+    Model forwards that take ``conv_impl=None`` (lenet_apply) consult it at
+    trace time; wrap the jit trace, not the jit call.
+    """
+    prev = current_conv_policy()
+    _policy_state.conv = ConvPolicy(
+        impl, paired, block_m, block_n, block_k, interpret
+    )
+    try:
+        yield
+    finally:
+        _policy_state.conv = prev
+
+
+def conv_context(knobs, paired=None):
+    """ConvPolicy context from a PerfKnobs-like object (``conv``/``block_*``).
+
+    ``knobs.conv`` other than ``"xla"`` activates :func:`pallas_conv` with
+    that implementation; ``paired`` supplies the per-layer artifacts the
+    ``"pallas_paired"`` choice consumes.
+    """
+    impl = getattr(knobs, "conv", "xla")
+    if impl != "xla":
+        return pallas_conv(
+            impl,
+            paired=paired,
+            block_m=getattr(knobs, "block_m", 0),
+            block_n=getattr(knobs, "block_n", 0),
+            block_k=getattr(knobs, "block_k", 0),
+        )
+    return contextlib.nullcontext()
+
+
+@contextlib.contextmanager
+def perf_context(knobs, paired=None):
+    """Activate every kernel policy a PerfKnobs asks for (gemm + conv)."""
+    with gemm_context(knobs), conv_context(knobs, paired=paired):
+        yield

@@ -1,0 +1,160 @@
+"""Convolution through the paired Pallas GEMM — the paper's headline path.
+
+LeNet-5's 405 600 multiplies live in its conv layers (Table I), so this is
+where the subtractor replacement has to execute, not just be modeled.  The
+lowering chain is::
+
+    conv (NHWC, HWIO, VALID, stride 1)
+      → im2col patches (kernels/im2col.py): (N, OH, OW, K), K = kh·kw·cin
+      → permute patch lanes to the [I | J | residual] layout of a
+        StructuredPairing built offline on W.reshape(K, cout)
+      → paired_matmul (kernels/paired_matmul.py): the K-tiled grid-(m, n, k)
+        kernel subtracts paired patch lanes on the VPU and contracts over
+        K − P lanes on the MXU, with the conv bias + activation fused into
+        the epilogue.
+
+The pairing artifact (core/transform.py: PairedLayer) carries only the
+*index structure* (which lanes pair).  The pair magnitudes are recomputed
+from the live weights inside the traced function —
+``Kmat = (W[I] − W[J]) / 2`` — so the same artifact serves inference and
+``jax.grad`` (weights stay differentiable; only the pairing structure is
+frozen, exactly like the paper's one-time preprocessing).
+
+Differentiation: ``paired_conv`` is a ``jax.custom_vjp`` — forward through
+the Pallas kernel, backward as the VJP of the *folded dense equivalent*
+(im2col einsum against W_approx), which XLA schedules as the standard two
+conv-backward GEMMs.  Same split as ``kernels.ops.fused_dense``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pairing import StructuredPairing
+from repro.kernels import ops
+from repro.kernels.im2col import im2col
+from repro.kernels.paired_matmul import ACTIVATIONS
+
+def conv_im2col(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    activation: str = "none",
+) -> jax.Array:
+    """Reference conv-as-GEMM: im2col patches against the flattened kernel.
+
+    Pure jnp (differentiable as-is); the XLA-scheduled baseline for the
+    Pallas path and the ``conv_impl="im2col"`` policy choice.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = im2col(x, kh, kw)
+    y = jnp.einsum("nhwk,kf->nhwf", patches, w.reshape(kh * kw * cin, cout))
+    if bias is not None:
+        y = y + bias
+    return ACTIVATIONS[activation](y)
+
+
+def _pairing_of(artifact) -> StructuredPairing:
+    """Accept a StructuredPairing or anything carrying one (PairedLayer)."""
+    return artifact.pairing if hasattr(artifact, "pairing") else artifact
+
+
+def _live_segments(wm: jax.Array, sp: StructuredPairing):
+    """Kmat / W_res recomputed from live weights under the frozen structure."""
+    kmat = (wm[sp.I] - wm[sp.J]) * 0.5
+    w_res = wm[sp.resid]
+    return kmat, w_res
+
+
+def folded_conv_weight(w: jax.Array, pairing) -> jax.Array:
+    """Dense W_approx (kh, kw, cin, cout) the paired kernel is equivalent to.
+
+    The live-weight analogue of ``StructuredPairing.fold()``: paired rows
+    snap to ±Kmat, residual rows pass through.  Feeding this to a plain conv
+    reproduces the subtractor dataflow bit-for-bit (the test oracle, and the
+    backward-pass function).
+    """
+    sp = _pairing_of(pairing)
+    kh, kw, cin, cout = w.shape
+    wm = w.reshape(kh * kw * cin, cout)
+    kmat, w_res = _live_segments(wm, sp)
+    wf = (
+        jnp.zeros_like(wm)
+        .at[sp.I].set(kmat)
+        .at[sp.J].set(-kmat)
+        .at[sp.resid].set(w_res)
+    )
+    return wf.reshape(w.shape)
+
+
+def paired_conv_ref(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None,
+    pairing,
+    *,
+    activation: str = "none",
+) -> jax.Array:
+    """Pure-jnp oracle: folded dense conv == the paired kernel's math."""
+    return conv_im2col(
+        x, folded_conv_weight(w, pairing), bias, activation=activation
+    )
+
+
+def paired_conv(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    pairing,
+    activation: str = "none",
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Conv through the paired Pallas kernel. x: (N, H, W, cin) → (N, OH, OW, cout).
+
+    ``pairing`` is the offline artifact (StructuredPairing or PairedLayer)
+    for ``w.reshape(K, cout)``; ``block_* = 0`` defers to the tuning
+    heuristic.  Differentiable: Pallas forward, folded-XLA backward.
+    """
+    sp = _pairing_of(pairing)
+    kh, kw, cin, cout = w.shape
+    K = kh * kw * cin
+    assert sp.shape == (K, cout), (
+        f"pairing built for {sp.shape}, conv kernel flattens to {(K, cout)}"
+    )
+    perm = np.asarray(sp.perm())
+
+    def fwd_kernel(x, w, bias):
+        patches = im2col(x, kh, kw)
+        xp = patches[..., perm]  # static gather → [I | J | residual] lanes
+        wm = w.reshape(K, cout)
+        kmat, w_res = _live_segments(wm, sp)
+        return ops.paired_matmul(
+            xp, kmat.astype(x.dtype), w_res.astype(x.dtype), bias,
+            activation=activation,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+
+    def ref(x, w, bias):
+        return paired_conv_ref(x, w, bias, sp, activation=activation)
+
+    @jax.custom_vjp
+    def f(x, w, bias):
+        return fwd_kernel(x, w, bias)
+
+    def f_fwd(x, w, bias):
+        return fwd_kernel(x, w, bias), (x, w, bias)
+
+    def f_bwd(res, dy):
+        xr, wr, br = res
+        _, vjp = jax.vjp(ref, xr, wr, br)
+        return vjp(dy)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x, w, bias)

@@ -50,7 +50,6 @@ that is how the kernel is validated in this container (TPU is the target).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

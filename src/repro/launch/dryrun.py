@@ -27,7 +27,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from repro.configs import ALL_ARCHS, get_config
 from repro.configs.base import SHAPES, supports_shape

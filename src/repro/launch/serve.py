@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core.transform import pair_model_params
 from repro.models import lm as M
+from repro.models.lenet import CONV_IMPLS
 from repro.models.param import unzip
 from repro.serving.engine import ServeEngine
 
@@ -34,6 +35,10 @@ def main() -> None:
     ap.add_argument("--gemm", choices=("xla", "pallas"), default="xla",
                     help="route layer GEMMs through the fused K-tiled "
                          "Pallas kernel (interpret mode off-TPU)")
+    ap.add_argument("--conv", choices=CONV_IMPLS, default="xla",
+                    help="conv lowering for conv-bearing models: plain "
+                         "lax.conv, im2col patch GEMM, or the paired "
+                         "subtractor kernel (no-op for the pure-LM archs)")
     ap.add_argument("--block-k", type=int, default=0,
                     help="Pallas GEMM k-tile; 0 → kernels.tuning heuristic")
     args = ap.parse_args()
@@ -48,7 +53,7 @@ def main() -> None:
               f"power −{100*s['power_saving']:.1f}%, area −{100*s['area_saving']:.1f}%")
 
     knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none",
-                        gemm=args.gemm, block_k=args.block_k)
+                        gemm=args.gemm, conv=args.conv, block_k=args.block_k)
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, batch_size=args.batch, knobs=knobs)
     rng = np.random.default_rng(0)
     prompts = {

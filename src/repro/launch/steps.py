@@ -13,9 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels.ops import gemm_context
+from repro.kernels.ops import perf_context
 from repro.launch.inputs import batch_logical_axes, batch_specs
-from repro.launch.mesh import data_axes
 from repro.models import lm as M
 from repro.models.param import unzip
 from repro.parallel.rules import rules_for
@@ -87,11 +86,11 @@ def build_train_step(cfg: ModelConfig, opt: Optimizer, knobs: M.PerfKnobs, mesh,
     """Returns train_step(params, opt_state, step, batch) -> (params', opt', metrics).
 
     ``knobs.gemm == "pallas"`` traces the step with the fused Pallas GEMM
-    policy active (see kernels.ops.gemm_context), baking the K-tiled
+    policy active (see kernels.ops.perf_context), baking the K-tiled
     kernels into the compiled step."""
 
     def train_step(params, opt_state, step, batch):
-        with activate(mesh, rules), gemm_context(knobs):
+        with activate(mesh, rules), perf_context(knobs):
             (loss, metrics), grads = jax.value_and_grad(
                 lambda p: M.lm_loss(cfg, p, batch, knobs=knobs), has_aux=True
             )(params)
@@ -103,7 +102,7 @@ def build_train_step(cfg: ModelConfig, opt: Optimizer, knobs: M.PerfKnobs, mesh,
 
 def build_prefill_step(cfg: ModelConfig, knobs: M.PerfKnobs, mesh, rules: Rules):
     def prefill_step(params, batch):
-        with activate(mesh, rules), gemm_context(knobs):
+        with activate(mesh, rules), perf_context(knobs):
             logits, cache = M.prefill(cfg, params, batch, knobs=knobs)
         return logits, cache
 
@@ -113,7 +112,7 @@ def build_prefill_step(cfg: ModelConfig, knobs: M.PerfKnobs, mesh, rules: Rules)
 def build_serve_step(cfg: ModelConfig, mesh, rules: Rules,
                      knobs: M.PerfKnobs = M.DEFAULT_KNOBS):
     def serve_step(params, cache, batch):
-        with activate(mesh, rules), gemm_context(knobs):
+        with activate(mesh, rules), perf_context(knobs):
             logits, new_cache = M.decode_step(
                 cfg, params, cache, batch["tokens"], batch["pos"]
             )

@@ -24,11 +24,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.tokens import token_batches
-from repro.launch.inputs import make_batch
 from repro.launch.steps import build_train_step
 from repro.models import lm as M
 from repro.models.param import unzip

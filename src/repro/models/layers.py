@@ -14,15 +14,13 @@ axes annotations made at init time).  Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, MlaConfig, MoeConfig, SsmConfig
+from repro.configs.base import ModelConfig
 from repro.models.param import Param
 from repro.parallel.sharding import constrain
 

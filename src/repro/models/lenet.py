@@ -64,13 +64,70 @@ def _maxpool2(x):
     )
 
 
-def lenet_apply(params: dict, x: jax.Array) -> jax.Array:
-    """Forward pass: x (N, 32, 32, 1) → logits (N, 10)."""
-    x = jax.nn.relu(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))  # 28
+CONV_IMPLS = ("xla", "im2col", "pallas_paired")
+
+
+def _resolve_conv(conv_impl, paired):
+    """Fill conv dispatch choices from the thread-local policy (ops.pallas_conv)."""
+    from repro.kernels import ops as kops
+
+    pol = kops.current_conv_policy()
+    impl = conv_impl or (pol.impl if pol is not None else "xla")
+    if paired is None and pol is not None:
+        paired = pol.paired
+    blocks = {}
+    if pol is not None and impl == "pallas_paired":
+        blocks = dict(
+            block_m=pol.block_m, block_n=pol.block_n, block_k=pol.block_k,
+            interpret=pol.interpret,
+        )
+    assert impl in CONV_IMPLS, f"conv_impl must be one of {CONV_IMPLS}, got {impl!r}"
+    if impl == "pallas_paired" and paired is None:
+        raise ValueError(
+            "conv_impl='pallas_paired' needs per-layer pairing artifacts: "
+            "pass paired=build_conv_pairings(params, rounding) "
+            "(repro.core.transform) or set them on the pallas_conv policy"
+        )
+    return impl, paired, blocks
+
+
+def lenet_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    conv_impl: str | None = None,
+    paired: dict | None = None,
+) -> jax.Array:
+    """Forward pass: x (N, 32, 32, 1) → logits (N, 10).
+
+    ``conv_impl`` selects the conv lowering: ``"xla"`` (lax.conv, default),
+    ``"im2col"`` (patch GEMM via XLA), or ``"pallas_paired"`` (patch GEMM
+    through the fused subtractor kernel; needs ``paired`` —
+    per-layer artifacts from ``repro.core.transform.build_conv_pairings``).
+    ``None`` defers to the thread-local ``pallas_conv`` policy, so serving
+    knobs can flip the implementation without touching call sites.  All
+    three paths are differentiable (the paired path carries a custom VJP).
+    """
+    from repro.kernels.paired_conv import conv_im2col, paired_conv
+
+    impl, paired, blocks = _resolve_conv(conv_impl, paired)
+
+    def conv(name, x):
+        w, b = params[name]["w"], params[name]["b"]
+        if impl == "xla":
+            return jax.nn.relu(_conv(x, w, b))
+        if impl == "im2col":
+            return conv_im2col(x, w, b, activation="relu")
+        # pallas_paired: bias + relu fuse into the kernel epilogue
+        return paired_conv(
+            x, w, b, pairing=paired[name], activation="relu", **blocks
+        )
+
+    x = conv("conv1", x)  # 28
     x = _maxpool2(x)  # 14
-    x = jax.nn.relu(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))  # 10
+    x = conv("conv2", x)  # 10
     x = _maxpool2(x)  # 5
-    x = jax.nn.relu(_conv(x, params["conv3"]["w"], params["conv3"]["b"]))  # 1
+    x = conv("conv3", x)  # 1
     x = x.reshape(x.shape[0], -1)  # (N, 120)
     x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
     return x @ params["fc2"]["w"] + params["fc2"]["b"]
@@ -84,10 +141,22 @@ def lenet_loss(params: dict, images: jax.Array, labels: jax.Array):
     return loss, acc
 
 
-def lenet_accuracy(params: dict, images, labels, batch: int = 512) -> float:
+def lenet_accuracy(
+    params: dict,
+    images,
+    labels,
+    batch: int = 512,
+    *,
+    conv_impl: str | None = None,
+    paired: dict | None = None,
+) -> float:
     """Full-dataset accuracy, batched to bound memory."""
     hits = 0
-    apply = jax.jit(lenet_apply)
+
+    @jax.jit
+    def apply(p, xb):
+        return lenet_apply(p, xb, conv_impl=conv_impl, paired=paired)
+
     for i in range(0, images.shape[0], batch):
         logits = apply(params, jnp.asarray(images[i : i + batch]))
         hits += int((jnp.argmax(logits, -1) == jnp.asarray(labels[i : i + batch])).sum())

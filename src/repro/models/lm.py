@@ -23,11 +23,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.param import Param, stack_params, unzip
+from repro.models.param import Param, stack_params
 from repro.parallel.sharding import constrain
 
 
@@ -50,6 +49,8 @@ class PerfKnobs:
     # launch/dryrun then adds the kernel's boundary HBM traffic analytically
     gemm: str = "xla"  # "xla" | "pallas" — route layer GEMMs (layers.dense)
     # through the K-tiled epilogue-fused Pallas kernel instead of XLA einsums
+    conv: str = "xla"  # "xla" | "im2col" | "pallas_paired" — conv lowering
+    # (models.lenet consults the policy; LM archs have no 2-D convs, no-op)
     block_m: int = 0  # Pallas GEMM tile sizes; 0 → kernels.tuning heuristic
     block_n: int = 0
     block_k: int = 0
@@ -741,7 +742,6 @@ def decode_step(
 ):
     """One decode step. Returns (logits (B, 1, V), new_cache)."""
     cdt = jnp.dtype(cfg.dtype)
-    B = tokens.shape[0]
     h = embed_tokens(cfg, params, tokens, cdt)
     pos_abs = pos + cfg.meta_tokens
     if cfg.family == "encdec":

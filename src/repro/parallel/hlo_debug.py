@@ -8,7 +8,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse
 from collections import defaultdict
 
-import jax
 
 from repro.parallel import hlo as H
 from repro.parallel.sharding import set_mesh_compat

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels.ops import gemm_context
+from repro.kernels.ops import perf_context
 from repro.models import lm as M
 from repro.models.param import unzip
 
@@ -40,14 +40,16 @@ class ServeEngine:
         self.active = np.zeros((self.batch_size,), bool)
 
         # knobs.gemm == "pallas" routes every layers.dense GEMM in the traced
-        # step through the fused K-tiled kernel (the policy is consulted at
-        # trace time, so it must wrap the function body, not the jit call).
+        # step through the fused K-tiled kernel, and knobs.conv selects the
+        # conv lowering for conv-bearing models (the policies are consulted
+        # at trace time, so they must wrap the function body, not the jit
+        # call).
         def decode_fn(p, c, t, pos):
-            with gemm_context(self.knobs):
+            with perf_context(self.knobs):
                 return M.decode_step(self.cfg, p, c, t, pos)
 
         def prefill_fn(p, b):
-            with gemm_context(self.knobs):
+            with perf_context(self.knobs):
                 return M.prefill(self.cfg, p, b, knobs=self.knobs)
 
         self._decode = jax.jit(decode_fn)

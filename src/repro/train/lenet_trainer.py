@@ -9,7 +9,6 @@ from __future__ import annotations
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.mnist import batches, load_mnist, pad_to_32

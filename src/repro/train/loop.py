@@ -7,7 +7,6 @@ resume-from-latest (fault tolerance is exercised by tests/test_checkpoint.py).
 from __future__ import annotations
 
 import time
-from pathlib import Path
 from typing import Any, Callable, Iterable
 
 import jax

@@ -7,7 +7,6 @@ same shards as its parameter).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

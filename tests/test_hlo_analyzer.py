@@ -2,7 +2,6 @@
 graphs and (b) correctly multiply loop-body costs by static trip counts."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.parallel.hlo import analyze, parse_hlo, xla_cost_analysis
@@ -86,8 +85,6 @@ def test_hbm_bytes_reasonable():
 
 
 def test_collective_ring_factors():
-    import os
-
     # 8 host devices were forced in conftest? no — single device here, so
     # build a fake HLO snippet instead.
     text = """

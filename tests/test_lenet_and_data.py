@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.transform import pair_model_params
 from repro.data.mnist import load_mnist, pad_to_32, synthetic_mnist, batches

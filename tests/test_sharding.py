@@ -1,6 +1,4 @@
 """Sharding rules: divisibility guards, mesh-axis dedup, rule tables."""
-import os
-
 import jax
 import pytest
 from jax.sharding import PartitionSpec as P
