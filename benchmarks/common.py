@@ -15,6 +15,26 @@ def write_result(name: str, payload: Any) -> Path:
     return path
 
 
+def count_primitives(jaxpr, name: str) -> int:
+    """Count occurrences of a primitive in a (closed) jaxpr, recursively.
+
+    Walks call/custom-vjp/scan sub-jaxprs, so the count covers the whole
+    traced program — used to audit the fused conv path's schedule (e.g.
+    ``reduce_window_max`` must be absent, ``pallas_call`` counts HBM
+    writebacks of the conv layers).
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in inner.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for s in v if isinstance(v, (list, tuple)) else [v]:
+                if hasattr(s, "jaxpr") or hasattr(s, "eqns"):
+                    n += count_primitives(s, name)
+    return n
+
+
 def fmt_table(rows: Sequence[dict], cols: Sequence[str], title: str = "") -> str:
     def fmt(v):
         if isinstance(v, float):

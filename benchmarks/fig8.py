@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.cost_model import AsicCostModel, OpCounts
 from repro.core.pairing import column_pairing_for_conv, fold_columns, pairing_op_counts
 from repro.core.transform import build_conv_pairings
-from repro.kernels.tuning import choose_blocks
+from repro.kernels.tuning import choose_blocks, measure
 from repro.models.lenet import (
     LENET_CONV_POSITIONS,
     LENET_CONV_SHAPES,
@@ -26,7 +26,7 @@ from repro.models.lenet import (
 )
 from repro.train.lenet_trainer import get_trained_lenet
 
-from benchmarks.common import fmt_table, write_result
+from benchmarks.common import count_primitives, fmt_table, write_result
 
 ROUNDINGS = [0.0, 0.0001, 0.005, 0.01, 0.015, 0.02, 0.025, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3]
 
@@ -98,6 +98,74 @@ def measured_conv_path(params, test_x, rounding: float, batch: int = 32) -> dict
     }
 
 
+def fused_pool_path(params, test_x, batch: int = 32) -> dict:
+    """Fused conv→pool megakernel vs the unfused schedules, measured.
+
+    Three variants of the same LeNet forward on a real test batch:
+
+    * ``xla`` — lax.conv + standalone 2×2 reduce_window (the baseline),
+    * ``paired_unfused`` — the Pallas paired conv, pooling still a separate
+      XLA op (full activation map round-trips HBM),
+    * ``paired_fused`` — the megakernel: bias → relu → 2×2 max reduce inside
+      VMEM, one HBM writeback per conv layer.
+
+    Besides wall-clock, each variant's *traced program* is audited:
+    ``pool_ops`` counts standalone ``reduce_window_max`` primitives (must be
+    0 on the fused path) and ``conv_kernel_launches`` counts ``pallas_call``s
+    (must equal the 3 conv layers — exactly one writeback each).  The audit
+    is structural, so it holds identically on TPU where the wall-clock
+    numbers become hardware-meaningful.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    arts = build_conv_pairings(params, 0.0, positions=LENET_CONV_POSITIONS)
+    xb = jnp.asarray(test_x[:batch], jnp.float32)
+
+    variants = {
+        "xla": dict(conv_impl="xla", paired=None, fuse_pool=False),
+        "paired_unfused": dict(conv_impl="pallas_paired", paired=arts,
+                               fuse_pool=False),
+        "paired_fused": dict(conv_impl="pallas_paired", paired=arts,
+                             fuse_pool=True),
+    }
+    out: dict = {}
+    y_ref = None
+    for name, kw in variants.items():
+        fn = jax.jit(lambda p, x, kw=kw: lenet_apply(p, x, **kw))
+        jaxpr = jax.make_jaxpr(lambda p, x, kw=kw: lenet_apply(p, x, **kw))(
+            params, xb
+        )
+        y = np.asarray(fn(params, xb))
+        if y_ref is None:
+            y_ref = y
+        t = measure(lambda: fn(params, xb), reps=3, warmup=1)
+        out[name] = {
+            "wall_s": t,
+            "pool_ops": count_primitives(jaxpr, "reduce_window_max"),
+            "conv_kernel_launches": count_primitives(jaxpr, "pallas_call"),
+            "rel_err_vs_xla": float(
+                np.abs(y - y_ref).max() / max(np.abs(y_ref).max(), 1e-30)
+            ),
+        }
+
+    fused = out["paired_fused"]
+    assert fused["pool_ops"] == 0, (
+        "fused conv path still launches a standalone pooling op "
+        f"({fused['pool_ops']} reduce_window_max in the traced program)"
+    )
+    assert fused["conv_kernel_launches"] == len(arts), (
+        f"expected one kernel writeback per conv layer ({len(arts)}), "
+        f"traced {fused['conv_kernel_launches']}"
+    )
+    assert out["paired_unfused"]["pool_ops"] == 2  # the two pooled layers
+    assert fused["rel_err_vs_xla"] <= 1e-5, (
+        "fused conv→pool at rounding 0 must match the XLA reference: "
+        f"rel err {fused['rel_err_vs_xla']:.2e}"
+    )
+    return {"batch": batch, "variants": out}
+
+
 def run(quick: bool = False) -> dict:
     params, test_x, test_y, info = get_trained_lenet(verbose=False)
     base_acc = info["test_acc"]
@@ -160,18 +228,37 @@ def run(quick: bool = False) -> dict:
         f"relative err {measured['r0']['rel_err_vs_xla']:.2e}"
     )
 
+    # fused conv→pool megakernel: wall-clock vs the unfused schedules plus
+    # the structural audit (no standalone pool op, one writeback per conv)
+    fused = fused_pool_path(params, test_x, batch=batch)
+
     out = {
         "rows": rows,
         "baseline_accuracy": base_acc,
         "data_source": info["source"],
         "kernel_tile_configs": tile_configs,
         "measured_conv_path": measured,
+        "fused_pool_path": fused,
         "conv3_weight_distribution": dist,
         "paper_headline": {
             "rounding": 0.05,
             "power_saving_%": 32.03,
             "area_saving_%": 24.59,
             "acc_loss_%": 0.1,
+        },
+        # machine-readable perf trajectory (benchmarks/run.py lifts this
+        # into BENCH_fig8.json; CI gates on fused.pool_ops == 0)
+        "perf_summary": {
+            "fused_pool": fused,
+            "kernel_tile_configs": tile_configs,
+            "kernel_op_counts": {
+                tag: {
+                    "total_baseline_lanes": m["total_baseline_lanes"],
+                    "total_paired_lanes": m["total_paired_lanes"],
+                    "total_subs_per_image": m["total_subs_per_image"],
+                }
+                for tag, m in measured.items()
+            },
         },
     }
     print(fmt_table(rows, list(rows[0].keys()), "Fig. 8: trade-off per rounding size"))
@@ -187,6 +274,13 @@ def run(quick: bool = False) -> dict:
         f"r=0 err vs XLA conv: abs {measured['r0']['max_abs_err_vs_xla']:.2e} "
         f"rel {measured['r0']['rel_err_vs_xla']:.2e}"
     )
+    for name, v in fused["variants"].items():
+        print(
+            f"conv→pool [{name:>14s}]: {v['wall_s']*1e3:8.1f} ms/batch, "
+            f"{v['pool_ops']} standalone pool ops, "
+            f"{v['conv_kernel_launches']} kernel writebacks, "
+            f"rel err {v['rel_err_vs_xla']:.1e}"
+        )
     print(
         f"conv3 weights: mean {dist['mean']:+.4f} std {dist['std']:.4f} "
         f"positive fraction {dist['frac_positive']:.3f} (paper Fig. 3/4: "

@@ -4,19 +4,21 @@ per chip), the dominant bound, and the useful-compute ratio, for every
 (arch × shape) on the single-pod mesh (per the task spec; multi-pod cells
 prove the pod axis shards and are listed in §Dry-run).
 
-Also sweeps ``block_k`` for the K-tiled paired GEMM kernel
-(kernels/paired_matmul.py): for each representative (M, N, K, pair-rate)
-shape it validates every tile config against the jnp oracle in interpret
-mode, records the estimated per-program VMEM working set and analytic HBM
-traffic, and marks the tuning heuristic's pick — the data the heuristic in
-kernels/tuning.py is judged against.
+Also **autotunes** the K-tiled paired GEMM kernel
+(kernels/paired_matmul.py): for each representative (M, N, K, pair-rate,
+pool) shape the measured search in ``kernels.tuning.autotune_blocks`` times
+every VMEM-feasible tile config, validates each against the jnp oracle, and
+persists the winner into the on-disk :class:`~repro.kernels.tuning.TileCache`
+(``.cache/tile_cache.json``) that ``choose_blocks`` consults at trace time —
+this sweep is what turns the static VMEM heuristic into measured tile
+selection.  The table marks both the heuristic's pick and the measured
+winner so the gap between them stays visible.
 
     PYTHONPATH=src python -m benchmarks.roofline
 """
 from __future__ import annotations
 
 import json
-import time
 import zlib
 from pathlib import Path
 
@@ -26,15 +28,17 @@ from benchmarks.common import fmt_table, write_result
 
 DRYRUN_DIR = Path(__file__).parent / "results" / "dryrun"
 
-# (label, M, N, K, pair_fraction): pair_fraction of K lanes pair off in I/J
-# halves; the rest stay residual.  Shapes follow the workloads the configs
-# directory names (decode row, LeNet-ish conv-as-GEMM, d_model-scale FFN).
+# (label, M, N, K, pair_fraction, pool): pair_fraction of K lanes pair off
+# in I/J halves; the rest stay residual.  Shapes follow the workloads the
+# configs directory names (decode row, LeNet-ish conv-as-GEMM, d_model-scale
+# FFN) plus the fused conv→pool megakernel (window-major M counts *pooled*
+# rows).
 KERNEL_SWEEP_SHAPES = [
-    ("decode_row", 8, 512, 4096, 0.5),
-    ("conv_gemm", 256, 120, 400, 0.4),
-    ("ffn_proj", 128, 1024, 8192, 0.25),
+    ("decode_row", 8, 512, 4096, 0.5, "none"),
+    ("conv_gemm", 256, 120, 400, 0.4, "none"),
+    ("conv_pool_gemm", 196, 16, 150, 0.4, "max2"),
+    ("ffn_proj", 128, 1024, 8192, 0.25, "none"),
 ]
-BLOCK_KS = [128, 256, 512, 1024]
 
 
 def load_cells(mesh: str = "pod16x16", tag: str = "") -> list[dict]:
@@ -78,79 +82,112 @@ def roofline_row(d: dict) -> dict:
     }
 
 
-def kernel_block_sweep(quick: bool = False) -> list[dict]:
-    """Sweep block_k for the paired GEMM; validate each config vs the oracle.
+def kernel_block_sweep(quick: bool = False) -> tuple[list[dict], dict]:
+    """Autotune the paired GEMM per sweep shape; persist winners to the cache.
 
-    Runs in interpret mode (this container has no TPU), so the timing column
-    is *not* hardware time — the actionable outputs are correctness, the
-    VMEM working-set estimate per tile config, and the analytic HBM traffic
-    (streamed tiles per output block), which is what distinguishes tile
-    configs on hardware.
+    For every (M, N, K, pair-rate, pool) shape the measured search times each
+    VMEM-feasible tile candidate (``kernels.tuning.autotune_blocks``) and
+    validates it against the jnp oracle.  Winners are written through to the
+    on-disk TileCache, so subsequent traces under ``PerfKnobs(tile_cache=…)``
+    (or this same process) take the measured pick over the heuristic.
+
+    Runs in interpret mode in this container, so the timing column is *not*
+    hardware time — the search/persist/consult mechanism is what is
+    exercised end to end; on a TPU the same sweep yields hardware winners.
+    Returns (table rows, autotune summary incl. the cache path).
     """
     import numpy as np
     import jax.numpy as jnp
 
-    from repro.kernels.paired_matmul import paired_matmul_pallas
+    from repro.kernels import tuning
+    from repro.kernels.paired_matmul import POOLS, paired_matmul_pallas
     from repro.kernels.ref import paired_matmul_ref
-    from repro.kernels.tuning import choose_blocks, kernel_vmem_bytes
 
+    cache = tuning.TileCache()  # .cache/tile_cache.json (versioned)
     rows = []
-    shapes = KERNEL_SWEEP_SHAPES[:2] if quick else KERNEL_SWEEP_SHAPES
-    block_ks = BLOCK_KS[:2] if quick else BLOCK_KS
-    for label, M, N, K, frac in shapes:
+    winners = {}
+    shapes = KERNEL_SWEEP_SHAPES[:3] if quick else KERNEL_SWEEP_SHAPES
+    reps = 1 if quick else 3
+    for label, M, N, K, frac, pool in shapes:
         P = int(K * frac / 2)
         R = K - 2 * P
         rng = np.random.default_rng(zlib.crc32(label.encode()))
-        x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+        xshape = (4, M, K) if pool != "none" else (M, K)
+        x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
         kmat = jnp.asarray(rng.normal(size=(P, N)), jnp.float32)
         w_res = jnp.asarray(rng.normal(size=(R, N)), jnp.float32)
-        want = np.asarray(paired_matmul_ref(x, kmat, w_res))
+        if pool == "none":
+            want = np.asarray(paired_matmul_ref(x, kmat, w_res))
+        else:
+            per_w = [paired_matmul_ref(x[w], kmat, w_res) for w in range(4)]
+            want = np.asarray(POOLS[pool](jnp.stack(per_w)))
         scale = np.abs(want).max()
-        pick = choose_blocks(M, N, P, R, dtype_bytes=4)
-        # always sweep the heuristic's own pick, or the marked config would
-        # be the one config the sweep never validates
-        for bk in sorted(set(block_ks) | {pick.block_k}):
-            bm, bn = min(128, M), min(128, N)
-            t0 = time.perf_counter()
-            got = np.asarray(
-                paired_matmul_pallas(
-                    x, kmat, w_res,
-                    block_m=bm, block_n=bn, block_k=bk, interpret=True,
-                )
+        pick = tuning.choose_blocks(
+            M, N, P, R, dtype_bytes=4, pool=pool, use_cache=False
+        )
+
+        def runner(cfg, x=x, kmat=kmat, w_res=w_res, pool=pool):
+            return paired_matmul_pallas(
+                x, kmat, w_res,
+                block_m=cfg.block_m, block_n=cfg.block_n,
+                block_k=cfg.block_k, pool=pool, interpret=True,
             )
-            dt = time.perf_counter() - t0
+
+        cands = tuning.candidate_configs(M, N, P, R, dtype_bytes=4, pool=pool)
+        if quick:
+            cands = cands[:3] + ([pick] if pick not in cands[:3] else [])
+        # validate every candidate against the oracle before timing it —
+        # a fast-but-wrong tile config must never win.  The validation run
+        # is also the warmup, so autotune_blocks itself runs warmup=0 and
+        # each candidate executes reps+1 times total, not reps+warmup+1.
+        for cfg in cands:
+            got = np.asarray(runner(cfg))
             err = float(np.abs(got - want).max() / scale)
-            # analytic HBM traffic: every output tile streams its full
-            # paired + residual K once (x tiles + weight tiles) + writeback
-            n_tiles = -(-M // bm) * (-(-N // bn))
-            stream = (2 * bm * P + P * bn + bm * R + R * bn) * 4
-            hbm = n_tiles * stream + M * N * 4
+            assert err <= 1e-5, f"{label} {cfg}: rel err {err:.2e}"
+        best, records = tuning.autotune_blocks(
+            runner, M, N, P, R,
+            dtype_bytes=4, dtype="float32", pool=pool,
+            cache=cache, candidates=cands, reps=reps, warmup=0,
+        )
+        winners[label] = {
+            "MNK": f"{M}x{N}x{K}", "pairs": P, "pool": pool,
+            "winner": best.as_dict(),
+            "heuristic": pick.as_dict(),
+            "heuristic_matches": best == pick,
+        }
+        for rec in records:
+            cfg = tuning.TileConfig(
+                rec["block_m"], rec["block_n"], rec["block_k"]
+            )
             rows.append(
                 {
                     "shape": label,
                     "MNK": f"{M}x{N}x{K}",
                     "pairs": P,
-                    "block_k": bk,
-                    "rel_err": err,
-                    "vmem_KiB": kernel_vmem_bytes(
-                        bm, bn, min(bk, max(P, R, 1)),
-                        dtype_bytes=4, has_pairs=P > 0, has_resid=R > 0,
-                    ) / 1024,
-                    "hbm_MiB": hbm / 2**20,
-                    "interp_s": dt,
-                    "heuristic": "<<" if bk == pick.block_k else "",
-                    "tile": f"{bm}x{bn}x{bk}",
+                    "pool": pool,
+                    "tile": f"{cfg.block_m}x{cfg.block_n}x{cfg.block_k}",
+                    "vmem_KiB": rec["vmem_bytes"] / 1024,
+                    "interp_s": rec["time_s"],
+                    "heuristic": "<<" if cfg == pick else "",
+                    "measured": "**" if cfg == best else "",
                 }
             )
-            assert err <= 1e-5, f"{label} block_k={bk}: rel err {err:.2e}"
-    return rows
+    path = str(cache.save())
+    return rows, {"cache_path": path, "entries": len(cache), "winners": winners}
 
 
 def run(quick: bool = False) -> dict:
-    sweep = kernel_block_sweep(quick)
-    cols = ["shape", "MNK", "pairs", "block_k", "rel_err", "vmem_KiB",
-            "hbm_MiB", "interp_s", "heuristic"]
-    print(fmt_table(sweep, cols, "Paired-GEMM block_k sweep (interpret mode)"))
+    sweep, autotune = kernel_block_sweep(quick)
+    cols = ["shape", "MNK", "pairs", "pool", "tile", "vmem_KiB",
+            "interp_s", "heuristic", "measured"]
+    print(fmt_table(
+        sweep, cols,
+        "Paired-GEMM tile autotune (interpret mode; << heuristic, ** winner)",
+    ))
+    print(
+        f"[roofline] tile cache: {autotune['entries']} measured winners → "
+        f"{autotune['cache_path']}"
+    )
 
     cells = load_cells()
     rows = []
@@ -165,7 +202,12 @@ def run(quick: bool = False) -> dict:
         n_over = sum(1 for r in rows if r.get("fits") == "OVER")
         n_fail = sum(1 for r in rows if r.get("bound") == "FAILED")
         print(f"[roofline] {len(rows)} cells; {n_fail} failed; {n_over} over-HBM")
-    out = {"rows": rows, "kernel_block_sweep": sweep}
+    out = {
+        "rows": rows,
+        "kernel_block_sweep": sweep,
+        "kernel_autotune": autotune,
+        "perf_summary": {"kernel_autotune": autotune},
+    }
     write_result("roofline", out)
     return out
 

@@ -8,6 +8,12 @@ Fig. 8 incl. Fig. 3/4 weight-distribution stats); pairing_rate_lm extends
 the technique to the ten assigned architectures; roofline assembles the
 dry-run results (run `python -m repro.launch.dryrun` first for fresh cells).
 
+Besides each bench's own ``<name>.json``, the harness emits a
+machine-readable ``BENCH_<name>.json`` per bench — wall-clock, status, and
+the bench's ``perf_summary`` (kernel op counts, tile configs, fused-path
+audit) — so the perf trajectory is tracked across PRs (CI uploads these as
+artifacts and gates on the fused-path audit) instead of only printed.
+
 Exit code is nonzero when any selected bench fails — CI's smoke job depends
 on that (a green run must mean every bench actually succeeded).
 """
@@ -19,6 +25,7 @@ import time
 import traceback
 
 from benchmarks import fig8, pairing_rate_lm, roofline, table1
+from benchmarks.common import write_result
 
 BENCHES = [
     ("table1", "paper Table I", table1.run),
@@ -57,6 +64,19 @@ def main(argv: list[str] | None = None) -> int:
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
             results[name] = {"error": str(e)}
+        # machine-readable perf record, one file per bench per run
+        res = results[name] if isinstance(results[name], dict) else {}
+        write_result(
+            f"BENCH_{name}",
+            {
+                "bench": name,
+                "status": "error" if "error" in res else "ok",
+                "error": res.get("error"),
+                "wall_clock_s": time.time() - t0,
+                "quick": args.quick,
+                "summary": res.get("perf_summary", {}),
+            },
+        )
     n_fail = sum(1 for v in results.values() if "error" in v)
     print(f"\n[benchmarks] {len(selected) - n_fail}/{len(selected)} benches succeeded")
     return 1 if n_fail else 0

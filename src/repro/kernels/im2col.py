@@ -11,75 +11,163 @@ and the paired GEMM kernel (kernels/paired_matmul.py) runs unchanged on the
 patch rows — pairs of *patch lanes* subtract exactly like pairs of input
 channels do for a dense layer.
 
-Layout contract: NHWC activations, HWIO weights, VALID padding, stride 1
-(LeNet-5's convs; the only conv geometry the paper evaluates).  The patch
-axis is ordered (kh, kw, cin) row-major, i.e. exactly the order of
+Layout contract: NHWC activations, HWIO weights.  Stride and padding are
+general: ``stride`` is an int or (sh, sw); ``padding`` is ``"VALID"``,
+``"SAME"`` (XLA/TF split: low = total // 2), or explicit
+``((ph_lo, ph_hi), (pw_lo, pw_hi))``.  The patch axis is ordered
+(kh, kw, cin) row-major, i.e. exactly the order of
 ``w.reshape(kh*kw*cin, cout)`` — so conv weights flatten to the GEMM weight
 matrix with a plain reshape, no transpose.
 
-The extraction itself is ``kh*kw`` shifted views concatenated on the channel
-axis: pure strided slices, which XLA fuses and Pallas BlockSpecs can index —
-no scatter/gather tables.  ``col2im`` is the exact adjoint (overlap-add),
-which is what makes the conv path differentiable end to end.
+The extraction itself is ``kh*kw`` strided views of the (zero-)padded input
+concatenated on the channel axis: pure strided slices, which XLA fuses and
+Pallas BlockSpecs can index — no scatter/gather tables.  ``col2im`` is the
+exact adjoint (strided overlap-add into the padded frame, then un-pad),
+which is what makes the conv path differentiable end to end at every
+stride/padding.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+Stride = int | tuple[int, int]
+Padding = str | tuple[tuple[int, int], tuple[int, int]]
 
-def conv_output_hw(h: int, w: int, kh: int, kw: int) -> tuple[int, int]:
-    """Output spatial dims of a VALID, stride-1 conv."""
-    oh, ow = h - kh + 1, w - kw + 1
-    assert oh > 0 and ow > 0, f"kernel ({kh},{kw}) larger than input ({h},{w})"
+
+def _stride_hw(stride: Stride) -> tuple[int, int]:
+    if isinstance(stride, int):
+        assert stride >= 1, f"stride must be >= 1, got {stride}"
+        return stride, stride
+    sh, sw = stride
+    assert sh >= 1 and sw >= 1, f"stride must be >= 1, got {stride}"
+    return int(sh), int(sw)
+
+
+def _same_pad(size: int, k: int, s: int) -> tuple[int, int]:
+    """TF/XLA SAME: out = ceil(size / s), low pad gets the smaller half."""
+    out = -(-size // s)
+    total = max((out - 1) * s + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def resolve_padding(
+    h: int, w: int, kh: int, kw: int, stride: Stride, padding: Padding
+) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Normalise ``padding`` to explicit ((ph_lo, ph_hi), (pw_lo, pw_hi))."""
+    sh, sw = _stride_hw(stride)
+    if padding == "VALID":
+        return (0, 0), (0, 0)
+    if padding == "SAME":
+        return _same_pad(h, kh, sh), _same_pad(w, kw, sw)
+    (ph, pw) = padding  # explicit pairs
+    return (int(ph[0]), int(ph[1])), (int(pw[0]), int(pw[1]))
+
+
+def conv_output_hw(
+    h: int,
+    w: int,
+    kh: int,
+    kw: int,
+    stride: Stride = 1,
+    padding: Padding = "VALID",
+) -> tuple[int, int]:
+    """Output spatial dims of a conv at the given stride/padding."""
+    sh, sw = _stride_hw(stride)
+    (ph0, ph1), (pw0, pw1) = resolve_padding(h, w, kh, kw, stride, padding)
+    oh = (h + ph0 + ph1 - kh) // sh + 1
+    ow = (w + pw0 + pw1 - kw) // sw + 1
+    assert oh > 0 and ow > 0, (
+        f"kernel ({kh},{kw}) stride {(sh, sw)} padding {padding} yields empty "
+        f"output for input ({h},{w})"
+    )
     return oh, ow
 
 
-def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+def im2col(
+    x: jax.Array,
+    kh: int,
+    kw: int,
+    *,
+    stride: Stride = 1,
+    padding: Padding = "VALID",
+) -> jax.Array:
     """Extract patches: (N, H, W, C) → (N, OH, OW, kh*kw*C).
 
     Row layout of the last axis is (kh, kw, cin) row-major, matching
-    ``w.reshape(kh*kw*cin, cout)`` for HWIO conv weights.
+    ``w.reshape(kh*kw*cin, cout)`` for HWIO conv weights.  Defaults
+    (stride 1, VALID) reproduce the original LeNet-only extraction.
     """
     n, h, w, c = x.shape
-    oh, ow = conv_output_hw(h, w, kh, kw)
+    sh, sw = _stride_hw(stride)
+    (ph0, ph1), (pw0, pw1) = resolve_padding(h, w, kh, kw, stride, padding)
+    oh, ow = conv_output_hw(h, w, kh, kw, stride, padding)
     del n, c
+    if ph0 or ph1 or pw0 or pw1:
+        x = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
     views = [
-        x[:, i : i + oh, j : j + ow, :] for i in range(kh) for j in range(kw)
+        x[:, i : i + sh * (oh - 1) + 1 : sh, j : j + sw * (ow - 1) + 1 : sw, :]
+        for i in range(kh)
+        for j in range(kw)
     ]
     return jnp.concatenate(views, axis=-1)
 
 
 def col2im(
-    cols: jax.Array, x_shape: tuple[int, int, int, int], kh: int, kw: int
+    cols: jax.Array,
+    x_shape: tuple[int, int, int, int],
+    kh: int,
+    kw: int,
+    *,
+    stride: Stride = 1,
+    padding: Padding = "VALID",
 ) -> jax.Array:
     """Adjoint of :func:`im2col`: overlap-add patches back to image shape.
 
     cols: (N, OH, OW, kh*kw*C) → (N, H, W, C).  Satisfies
-    ``<im2col(x), y> == <x, col2im(y)>`` exactly, so it is the VJP of the
-    patch extraction (used by the paired-conv backward pass).
+    ``<im2col(x), y> == <x, col2im(y)>`` exactly at every stride/padding
+    (scatter-add into the padded frame, then slice the padding off — the
+    transpose of pad-then-strided-slice), so it is the VJP of the patch
+    extraction (used by the paired-conv backward pass).
     """
     n, h, w, c = x_shape
-    oh, ow = conv_output_hw(h, w, kh, kw)
-    del n
-    out = jnp.zeros(x_shape, cols.dtype)
+    sh, sw = _stride_hw(stride)
+    (ph0, ph1), (pw0, pw1) = resolve_padding(h, w, kh, kw, stride, padding)
+    oh, ow = conv_output_hw(h, w, kh, kw, stride, padding)
+    out = jnp.zeros((n, h + ph0 + ph1, w + pw0 + pw1, c), cols.dtype)
     idx = 0
     for i in range(kh):
         for j in range(kw):
-            out = out.at[:, i : i + oh, j : j + ow, :].add(
-                cols[..., idx * c : (idx + 1) * c]
-            )
+            out = out.at[
+                :,
+                i : i + sh * (oh - 1) + 1 : sh,
+                j : j + sw * (ow - 1) + 1 : sw,
+                :,
+            ].add(cols[..., idx * c : (idx + 1) * c])
             idx += 1
-    return out
+    return out[:, ph0 : ph0 + h, pw0 : pw0 + w, :]
 
 
 def overlap_counts(
-    x_shape: tuple[int, int, int, int], kh: int, kw: int
+    x_shape: tuple[int, int, int, int],
+    kh: int,
+    kw: int,
+    *,
+    stride: Stride = 1,
+    padding: Padding = "VALID",
 ) -> jax.Array:
     """How many patches cover each input pixel: col2im(im2col(1)) == counts.
 
     Dividing by this normalises the round-trip back to the original image
-    (interior pixels are covered kh·kw times, borders fewer).
+    where coverage is nonzero (strided extractions can skip pixels
+    entirely; padding makes border coverage asymmetric).
     """
     ones = jnp.ones(x_shape, jnp.float32)
-    return col2im(im2col(ones, kh, kw), x_shape, kh, kw)
+    return col2im(
+        im2col(ones, kh, kw, stride=stride, padding=padding),
+        x_shape,
+        kh,
+        kw,
+        stride=stride,
+        padding=padding,
+    )

@@ -37,7 +37,9 @@ def _on_tpu() -> bool:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "activation", "interpret"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "activation", "pool", "interpret",
+    ),
 )
 def paired_matmul(
     x: jax.Array,
@@ -49,27 +51,38 @@ def paired_matmul(
     block_n: int = 0,
     block_k: int = 0,
     activation: str = "none",
+    pool: str = "none",
     interpret: bool | None = None,
 ) -> jax.Array:
     """(…, K) @ paired weights → (…, N). x pre-permuted to [I|J|residual].
 
-    ``block_* = 0`` → heuristic tiles from :mod:`repro.kernels.tuning`.
-    ``bias``/``activation`` fuse into the kernel epilogue.
+    ``block_* = 0`` → tiles from :mod:`repro.kernels.tuning` (a warm
+    :class:`~repro.kernels.tuning.TileCache` hit wins over the heuristic).
+    ``bias``/``activation`` fuse into the kernel epilogue.  With
+    ``pool="max2"``/``"avg2"`` ``x`` must be window-major ``(4, M, K)`` and
+    the fused 2×2 reduction happens in VMEM (see paired_matmul_pallas).
     """
     interp = (not _on_tpu()) if interpret is None else interpret
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
+    has_pool = pool != "none"
+    if has_pool:
+        assert x.ndim == 3, f"pool={pool!r} expects (4, M, K) x, got {x.shape}"
+        lead, x2 = (), x
+    else:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
     tiles = tuning.resolve_blocks(
-        x2.shape[0], kmat.shape[1], kmat.shape[0], w_res.shape[0],
+        x2.shape[-2], kmat.shape[1], kmat.shape[0], w_res.shape[0],
         block_m=block_m, block_n=block_n, block_k=block_k,
-        dtype_bytes=x.dtype.itemsize,
+        dtype_bytes=x.dtype.itemsize, dtype=x.dtype.name, pool=pool,
     )
     y = paired_matmul_pallas(
         x2, kmat, w_res, bias,
         block_m=tiles.block_m, block_n=tiles.block_n, block_k=tiles.block_k,
-        activation=activation, interpret=interp,
+        activation=activation, pool=pool, interpret=interp,
     )
-    return y.reshape(*lead, y.shape[-1])
+    # pooled output is already (M_pooled, N); otherwise restore the lead dims
+    # (incl. the 1-D (K,) → (N,) case, where lead == ())
+    return y if has_pool else y.reshape(*lead, y.shape[-1])
 
 
 @functools.partial(
@@ -94,7 +107,7 @@ def dense_matmul(
     tiles = tuning.resolve_blocks(
         x2.shape[0], w.shape[1], 0, w.shape[0],
         block_m=block_m, block_n=block_n, block_k=block_k,
-        dtype_bytes=x.dtype.itemsize,
+        dtype_bytes=x.dtype.itemsize, dtype=x.dtype.name,
     )
     y = dense_matmul_pallas(
         x2, w, bias,
@@ -248,11 +261,15 @@ class ConvPolicy:
     ``impl`` is one of ``"xla"`` (lax.conv), ``"im2col"`` (patch GEMM via
     XLA) or ``"pallas_paired"`` (patch GEMM through the paired kernel, which
     additionally needs the per-layer ``paired`` artifacts from
-    :func:`repro.core.transform.build_conv_pairings`).
+    :func:`repro.core.transform.build_conv_pairings`).  ``fuse_pool`` makes
+    the ``"pallas_paired"`` path absorb a following 2×2 max-pool into the
+    kernel epilogue (the conv→pool megakernel: one HBM writeback, no
+    standalone pooling op).
     """
 
     impl: str = "xla"
     paired: object = None  # {layer_name: PairedLayer} for "pallas_paired"
+    fuse_pool: bool = False
     block_m: int = 0
     block_n: int = 0
     block_k: int = 0
@@ -267,6 +284,7 @@ def current_conv_policy() -> ConvPolicy | None:
 def pallas_conv(
     impl: str = "pallas_paired",
     paired=None,
+    fuse_pool: bool = False,
     block_m: int = 0,
     block_n: int = 0,
     block_k: int = 0,
@@ -279,7 +297,7 @@ def pallas_conv(
     """
     prev = current_conv_policy()
     _policy_state.conv = ConvPolicy(
-        impl, paired, block_m, block_n, block_k, interpret
+        impl, paired, fuse_pool, block_m, block_n, block_k, interpret
     )
     try:
         yield
@@ -292,13 +310,15 @@ def conv_context(knobs, paired=None):
 
     ``knobs.conv`` other than ``"xla"`` activates :func:`pallas_conv` with
     that implementation; ``paired`` supplies the per-layer artifacts the
-    ``"pallas_paired"`` choice consumes.
+    ``"pallas_paired"`` choice consumes, and ``knobs.fuse_pool`` turns on
+    the conv→pool megakernel epilogue.
     """
     impl = getattr(knobs, "conv", "xla")
     if impl != "xla":
         return pallas_conv(
             impl,
             paired=paired,
+            fuse_pool=getattr(knobs, "fuse_pool", False),
             block_m=getattr(knobs, "block_m", 0),
             block_n=getattr(knobs, "block_n", 0),
             block_k=getattr(knobs, "block_k", 0),
@@ -306,8 +326,22 @@ def conv_context(knobs, paired=None):
     return contextlib.nullcontext()
 
 
+def tile_cache_context(knobs):
+    """``knobs.tile_cache`` (a path) installs a persisted TileCache so the
+    kernels' tile selection prefers measured winners over the heuristic;
+    empty/absent is a no-op (heuristic only).  Trace-time, like the other
+    policies: choose_blocks runs while the step is being traced."""
+    path = getattr(knobs, "tile_cache", "")
+    if path:
+        return tuning.use_tile_cache(path)
+    return contextlib.nullcontext()
+
+
 @contextlib.contextmanager
 def perf_context(knobs, paired=None):
-    """Activate every kernel policy a PerfKnobs asks for (gemm + conv)."""
-    with gemm_context(knobs), conv_context(knobs, paired=paired):
+    """Activate every kernel policy a PerfKnobs asks for (gemm + conv +
+    tile cache)."""
+    with tile_cache_context(knobs), gemm_context(knobs), conv_context(
+        knobs, paired=paired
+    ):
         yield

@@ -4,7 +4,7 @@ LeNet-5's 405 600 multiplies live in its conv layers (Table I), so this is
 where the subtractor replacement has to execute, not just be modeled.  The
 lowering chain is::
 
-    conv (NHWC, HWIO, VALID, stride 1)
+    conv (NHWC, HWIO, any stride / VALID / SAME / explicit padding)
       → im2col patches (kernels/im2col.py): (N, OH, OW, K), K = kh·kw·cin
       → permute patch lanes to the [I | J | residual] layout of a
         StructuredPairing built offline on W.reshape(K, cout)
@@ -12,6 +12,15 @@ lowering chain is::
         kernel subtracts paired patch lanes on the VPU and contracts over
         K − P lanes on the MXU, with the conv bias + activation fused into
         the epilogue.
+
+With ``pool="max2"``/``"avg2"`` the lowering becomes the conv→pool
+**megakernel**: the patch rows are re-arranged *window-major* — the four
+GEMM rows of one 2×2 pooling window become the leading axis of a
+``(4, N·⌊OH/2⌋·⌊OW/2⌋, K)`` operand — so the kernel reduces the window in
+VMEM and writes only the pooled map to HBM.  conv→pool stops round-tripping
+the full activation map (the row re-arrangement is a transpose of patches
+XLA fuses into the extraction; odd trailing rows/cols are trimmed, matching
+``reduce_window`` VALID semantics).
 
 The pairing artifact (core/transform.py: PairedLayer) carries only the
 *index structure* (which lanes pair).  The pair magnitudes are recomputed
@@ -22,8 +31,9 @@ frozen, exactly like the paper's one-time preprocessing).
 
 Differentiation: ``paired_conv`` is a ``jax.custom_vjp`` — forward through
 the Pallas kernel, backward as the VJP of the *folded dense equivalent*
-(im2col einsum against W_approx), which XLA schedules as the standard two
-conv-backward GEMMs.  Same split as ``kernels.ops.fused_dense``.
+(im2col einsum against W_approx, plus the same window reduction), which XLA
+schedules as the standard two conv-backward GEMMs.  Same split as
+``kernels.ops.fused_dense``.
 """
 from __future__ import annotations
 
@@ -33,8 +43,43 @@ import numpy as np
 
 from repro.core.pairing import StructuredPairing
 from repro.kernels import ops
-from repro.kernels.im2col import im2col
-from repro.kernels.paired_matmul import ACTIVATIONS
+from repro.kernels.im2col import Padding, Stride, im2col
+from repro.kernels.paired_matmul import ACTIVATIONS, POOL_WINDOW, POOLS
+
+
+def pool2_reference(y: jax.Array, pool: str) -> jax.Array:
+    """2×2/stride-2 window reduction on an NHWC map, VALID semantics.
+
+    The pure-jnp mirror of the kernel's fused pooling epilogue (odd trailing
+    rows/cols trimmed, max or mean over each window) — and of
+    ``lax.reduce_window`` with window (1,2,2,1), stride (1,2,2,1), VALID.
+    """
+    if pool == "none" or pool is None:
+        return y
+    assert pool in POOLS, f"unknown pool {pool!r}"
+    n, oh, ow, c = y.shape
+    poh, pow_ = oh // 2, ow // 2
+    assert poh > 0 and pow_ > 0, f"map {(oh, ow)} too small for a 2x2 pool"
+    yw = y[:, : 2 * poh, : 2 * pow_, :].reshape(n, poh, 2, pow_, 2, c)
+    if pool == "max2":
+        return yw.max(axis=(2, 4))
+    return yw.mean(axis=(2, 4))
+
+
+def _window_major(patches: jax.Array) -> tuple[jax.Array, tuple[int, int, int]]:
+    """(N, OH, OW, K) patches → window-major (4, N·POH·POW, K) GEMM rows.
+
+    Axis 0 enumerates the 2×2 window elements (dh-major) of pooled output
+    row ``m = ((n·POH) + poh)·POW + pow``; odd trailing rows/cols are
+    trimmed (VALID pooling).  Pure transpose — XLA fuses it into the patch
+    extraction, nothing extra is materialised.
+    """
+    n, oh, ow, K = patches.shape
+    poh, pow_ = oh // 2, ow // 2
+    pw = patches[:, : 2 * poh, : 2 * pow_, :].reshape(n, poh, 2, pow_, 2, K)
+    pw = pw.transpose(2, 4, 0, 1, 3, 5)  # (2, 2, n, poh, pow, K)
+    return pw.reshape(POOL_WINDOW, n * poh * pow_, K), (n, poh, pow_)
+
 
 def conv_im2col(
     x: jax.Array,
@@ -42,18 +87,24 @@ def conv_im2col(
     bias: jax.Array | None = None,
     *,
     activation: str = "none",
+    stride: Stride = 1,
+    padding: Padding = "VALID",
+    pool: str = "none",
 ) -> jax.Array:
     """Reference conv-as-GEMM: im2col patches against the flattened kernel.
 
     Pure jnp (differentiable as-is); the XLA-scheduled baseline for the
-    Pallas path and the ``conv_impl="im2col"`` policy choice.
+    Pallas path and the ``conv_impl="im2col"`` policy choice.  ``pool``
+    applies the 2×2 window reduction after the activation (same epilogue
+    order as the megakernel).
     """
     kh, kw, cin, cout = w.shape
-    patches = im2col(x, kh, kw)
+    patches = im2col(x, kh, kw, stride=stride, padding=padding)
     y = jnp.einsum("nhwk,kf->nhwf", patches, w.reshape(kh * kw * cin, cout))
     if bias is not None:
         y = y + bias
-    return ACTIVATIONS[activation](y)
+    y = ACTIVATIONS[activation](y)
+    return pool2_reference(y, pool)
 
 
 def _pairing_of(artifact) -> StructuredPairing:
@@ -96,10 +147,14 @@ def paired_conv_ref(
     pairing,
     *,
     activation: str = "none",
+    stride: Stride = 1,
+    padding: Padding = "VALID",
+    pool: str = "none",
 ) -> jax.Array:
-    """Pure-jnp oracle: folded dense conv == the paired kernel's math."""
+    """Pure-jnp oracle: folded dense conv (+pool) == the paired kernel's math."""
     return conv_im2col(
-        x, folded_conv_weight(w, pairing), bias, activation=activation
+        x, folded_conv_weight(w, pairing), bias,
+        activation=activation, stride=stride, padding=padding, pool=pool,
     )
 
 
@@ -110,6 +165,9 @@ def paired_conv(
     *,
     pairing,
     activation: str = "none",
+    stride: Stride = 1,
+    padding: Padding = "VALID",
+    pool: str = "none",
     block_m: int = 0,
     block_n: int = 0,
     block_k: int = 0,
@@ -118,8 +176,12 @@ def paired_conv(
     """Conv through the paired Pallas kernel. x: (N, H, W, cin) → (N, OH, OW, cout).
 
     ``pairing`` is the offline artifact (StructuredPairing or PairedLayer)
-    for ``w.reshape(K, cout)``; ``block_* = 0`` defers to the tuning
-    heuristic.  Differentiable: Pallas forward, folded-XLA backward.
+    for ``w.reshape(K, cout)``; ``block_* = 0`` defers to the tile cache /
+    tuning heuristic.  ``stride``/``padding`` follow
+    :func:`repro.kernels.im2col.im2col`.  ``pool="max2"``/``"avg2"`` fuses
+    the 2×2 window reduction into the kernel epilogue (one HBM writeback for
+    conv→pool; output is the pooled (N, ⌊OH/2⌋, ⌊OW/2⌋, cout) map).
+    Differentiable: Pallas forward, folded-XLA backward.
     """
     sp = _pairing_of(pairing)
     kh, kw, cin, cout = w.shape
@@ -127,13 +189,23 @@ def paired_conv(
     assert sp.shape == (K, cout), (
         f"pairing built for {sp.shape}, conv kernel flattens to {(K, cout)}"
     )
+    assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
     perm = np.asarray(sp.perm())
 
     def fwd_kernel(x, w, bias):
-        patches = im2col(x, kh, kw)
+        patches = im2col(x, kh, kw, stride=stride, padding=padding)
         xp = patches[..., perm]  # static gather → [I | J | residual] lanes
         wm = w.reshape(K, cout)
         kmat, w_res = _live_segments(wm, sp)
+        if pool != "none":
+            xw, (n, poh, pow_) = _window_major(xp)
+            y = ops.paired_matmul(
+                xw, kmat.astype(x.dtype), w_res.astype(x.dtype), bias,
+                activation=activation, pool=pool,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                interpret=interpret,
+            )
+            return y.reshape(n, poh, pow_, cout)
         return ops.paired_matmul(
             xp, kmat.astype(x.dtype), w_res.astype(x.dtype), bias,
             activation=activation,
@@ -142,7 +214,10 @@ def paired_conv(
         )
 
     def ref(x, w, bias):
-        return paired_conv_ref(x, w, bias, sp, activation=activation)
+        return paired_conv_ref(
+            x, w, bias, sp,
+            activation=activation, stride=stride, padding=padding, pool=pool,
+        )
 
     @jax.custom_vjp
     def f(x, w, bias):

@@ -45,6 +45,21 @@ Per-segment k-tiles are padded with zero lanes up to a ``bk`` multiple;
 zero activation lanes × zero weight rows contribute nothing, so no masking
 is needed in the accumulation.
 
+Fused pooling epilogue (the conv→pool→activation megakernel)
+============================================================
+With ``pool="max2"`` / ``"avg2"`` the kernel additionally reduces a 2×2
+spatial window *inside VMEM* before its single HBM writeback — the serving
+path for conv→pool stops round-tripping the full activation map through
+HBM.  The caller pre-arranges the GEMM rows **window-major**: the activation
+operand is ``(4, M, K)`` where axis 0 enumerates the 2×2 window elements of
+pooled output row ``m`` (see ``paired_conv``'s layout transform).  Each
+program then accumulates a ``(4, bm, bn)`` fp32 scratch (four 2-D MXU dots
+per k-step — the window axis is a leading, untiled dimension, which Mosaic
+handles without sublane reshapes), applies bias → activation on the full
+window, reduces over the window axis, and flushes only the ``(bm, bn)``
+*pooled* tile.  The HBM writeback shrinks 4×, and the separate pooling op
+disappears from the schedule.
+
 ``interpret=True`` executes the same kernel body with jnp semantics on CPU —
 that is how the kernel is validated in this container (TPU is the target).
 """
@@ -66,6 +81,14 @@ ACTIVATIONS: dict[str, Callable] = {
     "swish": jax.nn.silu,
     "tanh": jnp.tanh,
 }
+
+# Fused 2×2 window reductions over the leading (window) axis of the fp32
+# accumulator. "none" means no pooling (2-D kernel layout).
+POOLS: dict[str, Callable] = {
+    "max2": lambda a: a.max(axis=0),
+    "avg2": lambda a: a.mean(axis=0),
+}
+POOL_WINDOW = 4  # 2×2 — the only window geometry LeNet (and the paper) uses
 
 
 def _apply_epilogue(acc, bias_block, activation: str):
@@ -97,6 +120,7 @@ def _build_paired_call(
     bkr: int,
     has_bias: bool,
     activation: str,
+    pool: str,
     Mp: int,
     Np: int,
     out_dtype,
@@ -108,9 +132,16 @@ def _build_paired_call(
     residual k-steps; either count may be zero (but not both).  Inputs are
     ordered ``[xi, xj, kmat][:has_pairs] + [xr, w_res][:has_resid] +
     [bias][:has_bias]``.
+
+    ``pool != "none"`` selects the megakernel layout: activation operands
+    are window-major ``(4, Mp, K)``, the accumulator grows a leading window
+    axis, and the flush reduces the 2×2 window before the (single, pooled)
+    HBM writeback.  ``Mp`` then counts *pooled* output rows.
     """
     has_pairs = nkp > 0
     has_resid = nkr > 0
+    has_pool = pool != "none"
+    W = POOL_WINDOW if has_pool else 1
     nk = nkp + nkr
     assert nk > 0
 
@@ -142,6 +173,19 @@ def _build_paired_call(
         it = iter(refs)
         k = pl.program_id(2)
 
+        # Window-element accessors: with pooling the activation refs carry a
+        # leading window axis and the accumulator matches; each window
+        # element runs its own 2-D MXU dot (the window axis stays a leading,
+        # untiled dim — no sublane reshapes).
+        def x_at(ref, w):
+            return ref[w] if has_pool else ref[...]
+
+        def acc_add(w, val):
+            if has_pool:
+                acc_ref[w] = acc_ref[w] + val
+            else:
+                acc_ref[...] += val
+
         @pl.when(k == 0)
         def _zero():
             acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -151,12 +195,13 @@ def _build_paired_call(
 
             def paired_step():
                 # VPU subtract (the paper's subtractor) at input precision,
-                # then one MXU dot.
-                diff = sub(xi_ref[...], xj_ref[...])
-                acc_ref[...] += jnp.dot(
-                    cast(diff), cast(km_ref[...]),
-                    preferred_element_type=jnp.float32,
-                )
+                # then one MXU dot per window element.
+                km = cast(km_ref[...])
+                for w in range(W):
+                    diff = sub(x_at(xi_ref, w), x_at(xj_ref, w))
+                    acc_add(w, jnp.dot(
+                        cast(diff), km, preferred_element_type=jnp.float32,
+                    ))
 
             if has_resid:
                 pl.when(k < nkp)(paired_step)
@@ -166,10 +211,12 @@ def _build_paired_call(
             xr_ref, wr_ref = next(it), next(it)
 
             def resid_step():
-                acc_ref[...] += jnp.dot(
-                    cast(xr_ref[...]), cast(wr_ref[...]),
-                    preferred_element_type=jnp.float32,
-                )
+                wr = cast(wr_ref[...])
+                for w in range(W):
+                    acc_add(w, jnp.dot(
+                        cast(x_at(xr_ref, w)), wr,
+                        preferred_element_type=jnp.float32,
+                    ))
 
             if has_pairs:
                 pl.when(k >= nkp)(resid_step)
@@ -179,25 +226,32 @@ def _build_paired_call(
         @pl.when(k == nk - 1)
         def _flush():
             bias_block = b_ref[...] if has_bias else None
-            o_ref[...] = _apply_epilogue(
-                acc_ref[...], bias_block, activation
-            ).astype(o_ref.dtype)
+            acc = _apply_epilogue(acc_ref[...], bias_block, activation)
+            if has_pool:
+                acc = POOLS[pool](acc)  # (4, bm, bn) → (bm, bn) in VMEM
+            o_ref[...] = acc.astype(o_ref.dtype)
 
     # --- block specs: each segment's index map clamps into its own range ---
+    # (with pooling, activation blocks carry the full window axis up front)
+    def x_spec(bk, kmap):
+        if has_pool:
+            return pl.BlockSpec((W, bm, bk), lambda m, n, k: (0, *kmap(m, n, k)))
+        return pl.BlockSpec((bm, bk), kmap)
+
     in_specs = []
     if has_pairs:
         pk = lambda m, n, k: (m, jnp.minimum(k, nkp - 1))
         pw = lambda m, n, k: (jnp.minimum(k, nkp - 1), n)
         in_specs += [
-            pl.BlockSpec((bm, bkp), pk),
-            pl.BlockSpec((bm, bkp), pk),
+            x_spec(bkp, pk),
+            x_spec(bkp, pk),
             pl.BlockSpec((bkp, bn), pw),
         ]
     if has_resid:
         rk = lambda m, n, k: (m, jnp.clip(k - nkp, 0, nkr - 1))
         rw = lambda m, n, k: (jnp.clip(k - nkp, 0, nkr - 1), n)
         in_specs += [
-            pl.BlockSpec((bm, bkr), rk),
+            x_spec(bkr, rk),
             pl.BlockSpec((bkr, bn), rw),
         ]
     if has_bias:
@@ -213,13 +267,14 @@ def _build_paired_call(
                 dimension_semantics=("parallel", "parallel", "arbitrary")
             )
 
+    acc_shape = (W, bm, bn) if has_pool else (bm, bn)
     return pl.pallas_call(
         kernel,
         grid=(Mp // bm, Np // bn, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM(acc_shape, jnp.float32)],
         interpret=interpret,
         **kwargs,
     )
@@ -235,6 +290,7 @@ def paired_matmul_pallas(
     block_n: int = 128,
     block_k: int = 512,
     activation: str = "none",
+    pool: str = "none",
     interpret: bool = True,
 ) -> jax.Array:
     """K-tiled fused subtract-then-MAC GEMM with epilogue. Returns (M, N).
@@ -242,23 +298,41 @@ def paired_matmul_pallas(
     The contraction over ``P`` paired lanes and ``R`` residual lanes is
     tiled in ``block_k`` chunks with an fp32 VMEM accumulator (see the
     module docstring, "Kernel tiling").
+
+    ``pool="max2"``/``"avg2"`` selects the megakernel: ``x`` must then be
+    window-major ``(4, M, K)`` — axis 0 enumerating the 2×2 window elements
+    of pooled output row ``m`` — and the result is the *pooled* ``(M, N)``
+    map, reduced in VMEM before the single HBM writeback (see the module
+    docstring, "Fused pooling epilogue").
     """
-    M, K = x.shape
+    assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
+    has_pool = pool != "none"
+    if has_pool:
+        assert x.ndim == 3 and x.shape[0] == POOL_WINDOW, (
+            f"pool={pool!r} expects window-major x (4, M, K), got {x.shape}"
+        )
+    else:
+        assert x.ndim == 2, f"expected (M, K) activations, got {x.shape}"
+    M, K = x.shape[-2], x.shape[-1]
     P, N = kmat.shape
     R = w_res.shape[0]
     assert K == 2 * P + R, f"layout mismatch: K={K} vs 2P+R={2*P+R}"
     assert activation in ACTIVATIONS, f"unknown activation {activation!r}"
 
-    xi = x[:, :P]
-    xj = x[:, P : 2 * P]
-    xr = x[:, 2 * P :]
+    xi = x[..., :P]
+    xj = x[..., P : 2 * P]
+    xr = x[..., 2 * P :]
 
     if P + R == 0:
         # degenerate zero-length contraction: epilogue only
-        y = jnp.zeros((M, N), jnp.float32)
+        y = jnp.zeros(((POOL_WINDOW, M, N) if has_pool else (M, N)), jnp.float32)
         b = None if bias is None else bias.astype(jnp.float32)[None]
-        return _apply_epilogue(y, b, activation).astype(x.dtype)
+        y = _apply_epilogue(y, b, activation)
+        if has_pool:
+            y = POOLS[pool](y)
+        return y.astype(x.dtype)
 
+    m_axis, k_axis = x.ndim - 2, x.ndim - 1
     bm = min(block_m, M)
     bn = min(block_n, N)
     Mp = _ceil_to(M, bm)
@@ -274,14 +348,14 @@ def paired_matmul_pallas(
     if P:
         Pp = nkp * bkp
         operands += [
-            _pad_to(_pad_to(xi, 0, Mp), 1, Pp),
-            _pad_to(_pad_to(xj, 0, Mp), 1, Pp),
+            _pad_to(_pad_to(xi, m_axis, Mp), k_axis, Pp),
+            _pad_to(_pad_to(xj, m_axis, Mp), k_axis, Pp),
             _pad_to(_pad_to(kmat, 0, Pp), 1, Np),
         ]
     if R:
         Rp = nkr * bkr
         operands += [
-            _pad_to(_pad_to(xr, 0, Mp), 1, Rp),
+            _pad_to(_pad_to(xr, m_axis, Mp), k_axis, Rp),
             _pad_to(_pad_to(w_res, 0, Rp), 1, Np),
         ]
     if bias is not None:
@@ -289,7 +363,7 @@ def paired_matmul_pallas(
 
     call = _build_paired_call(
         bm=bm, bn=bn, nkp=nkp, bkp=bkp, nkr=nkr, bkr=bkr,
-        has_bias=bias is not None, activation=activation,
+        has_bias=bias is not None, activation=activation, pool=pool,
         Mp=Mp, Np=Np, out_dtype=x.dtype, interpret=interpret,
     )
     out = call(*operands)

@@ -39,8 +39,16 @@ def main() -> None:
                     help="conv lowering for conv-bearing models: plain "
                          "lax.conv, im2col patch GEMM, or the paired "
                          "subtractor kernel (no-op for the pure-LM archs)")
+    ap.add_argument("--fuse-pool", action="store_true",
+                    help="conv→pool megakernel: absorb 2x2 max-pools into "
+                         "the paired-conv epilogue (--conv pallas_paired "
+                         "only; one HBM writeback per conv layer)")
     ap.add_argument("--block-k", type=int, default=0,
-                    help="Pallas GEMM k-tile; 0 → kernels.tuning heuristic")
+                    help="Pallas GEMM k-tile; 0 → tile cache / heuristic")
+    ap.add_argument("--tile-cache", default="",
+                    help="path to a persisted kernel TileCache "
+                         "(benchmarks/roofline.py writes one); measured "
+                         "tile configs there beat the VMEM heuristic")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -53,7 +61,8 @@ def main() -> None:
               f"power −{100*s['power_saving']:.1f}%, area −{100*s['area_saving']:.1f}%")
 
     knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none",
-                        gemm=args.gemm, conv=args.conv, block_k=args.block_k)
+                        gemm=args.gemm, conv=args.conv, block_k=args.block_k,
+                        fuse_pool=args.fuse_pool, tile_cache=args.tile_cache)
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, batch_size=args.batch, knobs=knobs)
     rng = np.random.default_rng(0)
     prompts = {

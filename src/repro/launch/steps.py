@@ -87,7 +87,9 @@ def build_train_step(cfg: ModelConfig, opt: Optimizer, knobs: M.PerfKnobs, mesh,
 
     ``knobs.gemm == "pallas"`` traces the step with the fused Pallas GEMM
     policy active (see kernels.ops.perf_context), baking the K-tiled
-    kernels into the compiled step."""
+    kernels into the compiled step; ``knobs.tile_cache`` makes the trace
+    consult persisted measured tile configs, and ``knobs.fuse_pool`` turns
+    on the conv→pool megakernel epilogue for conv-bearing models."""
 
     def train_step(params, opt_state, step, batch):
         with activate(mesh, rules), perf_context(knobs):

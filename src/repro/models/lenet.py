@@ -67,7 +67,7 @@ def _maxpool2(x):
 CONV_IMPLS = ("xla", "im2col", "pallas_paired")
 
 
-def _resolve_conv(conv_impl, paired):
+def _resolve_conv(conv_impl, paired, fuse_pool):
     """Fill conv dispatch choices from the thread-local policy (ops.pallas_conv)."""
     from repro.kernels import ops as kops
 
@@ -75,6 +75,8 @@ def _resolve_conv(conv_impl, paired):
     impl = conv_impl or (pol.impl if pol is not None else "xla")
     if paired is None and pol is not None:
         paired = pol.paired
+    if fuse_pool is None:
+        fuse_pool = pol.fuse_pool if pol is not None else False
     blocks = {}
     if pol is not None and impl == "pallas_paired":
         blocks = dict(
@@ -88,7 +90,9 @@ def _resolve_conv(conv_impl, paired):
             "pass paired=build_conv_pairings(params, rounding) "
             "(repro.core.transform) or set them on the pallas_conv policy"
         )
-    return impl, paired, blocks
+    # the fused conv→pool epilogue only exists in the Pallas megakernel
+    fuse_pool = bool(fuse_pool) and impl == "pallas_paired"
+    return impl, paired, fuse_pool, blocks
 
 
 def lenet_apply(
@@ -97,6 +101,7 @@ def lenet_apply(
     *,
     conv_impl: str | None = None,
     paired: dict | None = None,
+    fuse_pool: bool | None = None,
 ) -> jax.Array:
     """Forward pass: x (N, 32, 32, 1) → logits (N, 10).
 
@@ -104,29 +109,39 @@ def lenet_apply(
     ``"im2col"`` (patch GEMM via XLA), or ``"pallas_paired"`` (patch GEMM
     through the fused subtractor kernel; needs ``paired`` —
     per-layer artifacts from ``repro.core.transform.build_conv_pairings``).
-    ``None`` defers to the thread-local ``pallas_conv`` policy, so serving
-    knobs can flip the implementation without touching call sites.  All
-    three paths are differentiable (the paired path carries a custom VJP).
+    ``fuse_pool`` (pallas_paired only) absorbs the 2×2 max-pool after
+    conv1/conv2 into the kernel epilogue — the separate ``_maxpool2`` ops
+    disappear and each conv layer makes exactly one (pooled) HBM writeback.
+    ``None`` defers either choice to the thread-local ``pallas_conv``
+    policy, so serving knobs can flip the implementation without touching
+    call sites.  All paths are differentiable (the paired path carries a
+    custom VJP).
     """
     from repro.kernels.paired_conv import conv_im2col, paired_conv
 
-    impl, paired, blocks = _resolve_conv(conv_impl, paired)
+    impl, paired, fuse_pool, blocks = _resolve_conv(conv_impl, paired, fuse_pool)
 
-    def conv(name, x):
+    def conv(name, x, pool=False):
         w, b = params[name]["w"], params[name]["b"]
-        if impl == "xla":
-            return jax.nn.relu(_conv(x, w, b))
-        if impl == "im2col":
-            return conv_im2col(x, w, b, activation="relu")
-        # pallas_paired: bias + relu fuse into the kernel epilogue
-        return paired_conv(
-            x, w, b, pairing=paired[name], activation="relu", **blocks
-        )
+        if impl == "pallas_paired":
+            # bias + relu (and, when fused, the 2×2 pool) run in the kernel
+            # epilogue — a pooled layer writes HBM exactly once
+            if pool and fuse_pool:
+                return paired_conv(
+                    x, w, b, pairing=paired[name], activation="relu",
+                    pool="max2", **blocks,
+                )
+            y = paired_conv(
+                x, w, b, pairing=paired[name], activation="relu", **blocks
+            )
+        elif impl == "im2col":
+            y = conv_im2col(x, w, b, activation="relu")
+        else:
+            y = jax.nn.relu(_conv(x, w, b))
+        return _maxpool2(y) if pool else y
 
-    x = conv("conv1", x)  # 28
-    x = _maxpool2(x)  # 14
-    x = conv("conv2", x)  # 10
-    x = _maxpool2(x)  # 5
+    x = conv("conv1", x, pool=True)  # 28 → 14
+    x = conv("conv2", x, pool=True)  # 10 → 5
     x = conv("conv3", x)  # 1
     x = x.reshape(x.shape[0], -1)  # (N, 120)
     x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
@@ -149,13 +164,16 @@ def lenet_accuracy(
     *,
     conv_impl: str | None = None,
     paired: dict | None = None,
+    fuse_pool: bool | None = None,
 ) -> float:
     """Full-dataset accuracy, batched to bound memory."""
     hits = 0
 
     @jax.jit
     def apply(p, xb):
-        return lenet_apply(p, xb, conv_impl=conv_impl, paired=paired)
+        return lenet_apply(
+            p, xb, conv_impl=conv_impl, paired=paired, fuse_pool=fuse_pool
+        )
 
     for i in range(0, images.shape[0], batch):
         logits = apply(params, jnp.asarray(images[i : i + batch]))

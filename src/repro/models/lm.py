@@ -51,9 +51,14 @@ class PerfKnobs:
     # through the K-tiled epilogue-fused Pallas kernel instead of XLA einsums
     conv: str = "xla"  # "xla" | "im2col" | "pallas_paired" — conv lowering
     # (models.lenet consults the policy; LM archs have no 2-D convs, no-op)
+    fuse_pool: bool = False  # conv→pool megakernel: absorb the 2×2 max-pool
+    # into the paired-conv epilogue (pallas_paired only; one HBM writeback
+    # per conv layer, no standalone pooling op in the schedule)
     block_m: int = 0  # Pallas GEMM tile sizes; 0 → kernels.tuning heuristic
     block_n: int = 0
     block_k: int = 0
+    tile_cache: str = ""  # path to a persisted kernels.tuning.TileCache;
+    # measured winners there beat the VMEM heuristic ("" → heuristic only)
 
 
 DEFAULT_KNOBS = PerfKnobs()

@@ -40,10 +40,12 @@ class ServeEngine:
         self.active = np.zeros((self.batch_size,), bool)
 
         # knobs.gemm == "pallas" routes every layers.dense GEMM in the traced
-        # step through the fused K-tiled kernel, and knobs.conv selects the
-        # conv lowering for conv-bearing models (the policies are consulted
-        # at trace time, so they must wrap the function body, not the jit
-        # call).
+        # step through the fused K-tiled kernel, knobs.conv selects the conv
+        # lowering for conv-bearing models (knobs.fuse_pool additionally
+        # fuses 2×2 pooling into the conv epilogue), and knobs.tile_cache
+        # points tile selection at persisted measured winners (the policies
+        # are consulted at trace time, so they must wrap the function body,
+        # not the jit call).
         def decode_fn(p, c, t, pos):
             with perf_context(self.knobs):
                 return M.decode_step(self.cfg, p, c, t, pos)

@@ -3,12 +3,13 @@
 The package lives under ``src/`` (src-layout without an installed dist), so
 insert it on ``sys.path`` before test collection imports ``repro``.  Also
 puts ``tests/`` itself on the path so the vendored ``_proptest`` helper
-imports from any working directory.
+imports from any working directory, and the repo root so tests can share
+the ``benchmarks`` helpers (e.g. the jaxpr audit in ``benchmarks.common``).
 """
 import sys
 from pathlib import Path
 
 _ROOT = Path(__file__).resolve().parent.parent
-for p in (str(_ROOT / "src"), str(_ROOT / "tests")):
+for p in (str(_ROOT / "src"), str(_ROOT / "tests"), str(_ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)

@@ -1,0 +1,282 @@
+"""Fused conv→pool→activation megakernel + generalized im2col.
+
+Covers the PR-3 acceptance gates: fused conv+pool equals the unfused XLA
+``conv → reduce_window`` reference ≤ 1e-5 at rounding 0 on all three LeNet
+conv geometries plus strided/padded non-LeNet geometries (max and mean
+windows), gradient parity of the custom VJP under ``jax.grad``, the
+arbitrary-stride / SAME / explicit-padding im2col with its exact ``col2im``
+adjoint, and the LeNet wiring (``fuse_pool`` drops the standalone pooling
+ops from the traced program — one kernel writeback per conv layer).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# the same jaxpr walker CI's bench gate uses — test and gate must agree on
+# what "no standalone pool op" means (conftest puts the repo root on the path)
+from benchmarks.common import count_primitives as _count_prims
+
+from repro.core.pairing import pair_rows_structured
+from repro.core.transform import build_conv_pairings
+from repro.kernels.im2col import col2im, conv_output_hw, im2col, overlap_counts
+from repro.kernels.ops import pallas_conv
+from repro.kernels.paired_conv import conv_im2col, paired_conv, pool2_reference
+from repro.models.lenet import init_lenet, lenet_apply
+
+# (input NHWC, kernel HWIO, stride, padding) — the three LeNet conv
+# geometries (conv3 fed a larger input so its 2×2 pool is nonempty) plus
+# strided / SAME / explicitly-padded non-LeNet geometries.
+LENET_POOL_CASES = [
+    ((2, 32, 32, 1), (5, 5, 1, 6), (1, 1), "VALID"),
+    ((2, 14, 14, 6), (5, 5, 6, 16), (1, 1), "VALID"),
+    ((2, 12, 12, 16), (5, 5, 16, 120), (1, 1), "VALID"),
+]
+STRIDED_PADDED_CASES = [
+    ((2, 13, 13, 3), (3, 3, 3, 8), (2, 2), "SAME"),
+    ((1, 16, 12, 4), (3, 5, 4, 7), (1, 2), ((1, 1), (2, 2))),
+]
+ALL_CASES = LENET_POOL_CASES + STRIDED_PADDED_CASES
+
+
+def _xla_conv(x, w, b=None, stride=(1, 1), padding="VALID"):
+    pad = padding if isinstance(padding, str) else list(padding)
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y if b is None else y + b
+
+
+def _xla_pool(y, pool):
+    if pool == "max2":
+        return jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    s = jax.lax.reduce_window(
+        y, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    return s / 4.0
+
+
+def _zero_pairing(kshape):
+    kh, kw, cin, cout = kshape
+    w = np.random.default_rng(sum(kshape)).normal(size=kshape).astype(np.float32)
+    sp = pair_rows_structured(
+        w.astype(np.float64).reshape(kh * kw * cin, cout), 0.0
+    )
+    assert sp.n_pairs == 0
+    return jnp.asarray(w), sp
+
+
+# ---------------------------------------------------------------------------
+# generalized im2col
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("xshape,kshape,stride,padding", ALL_CASES)
+def test_im2col_strided_padded_matches_conv(xshape, kshape, stride, padding):
+    rng = np.random.default_rng(xshape[1] + kshape[0])
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=kshape), jnp.float32)
+    kh, kw, cin, cout = kshape
+    got = conv_im2col(x, w, stride=stride, padding=padding)
+    want = _xla_conv(x, w, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    oh, ow = conv_output_hw(
+        xshape[1], xshape[2], kh, kw, stride=stride, padding=padding
+    )
+    assert want.shape[1:3] == (oh, ow)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("xshape,kshape,stride,padding", STRIDED_PADDED_CASES)
+def test_col2im_adjoint_strided_padded(xshape, kshape, stride, padding):
+    """<im2col(x), y> == <x, col2im(y)> holds at every stride/padding."""
+    rng = np.random.default_rng(7)
+    kh, kw = kshape[0], kshape[1]
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    cols = im2col(x, kh, kw, stride=stride, padding=padding)
+    y = jnp.asarray(rng.normal(size=cols.shape), jnp.float32)
+    lhs = float(jnp.vdot(cols, y))
+    rhs = float(jnp.vdot(
+        x, col2im(y, xshape, kh, kw, stride=stride, padding=padding)
+    ))
+    assert abs(lhs - rhs) <= 1e-3 * max(1.0, abs(lhs))
+
+
+def test_overlap_counts_strided():
+    """Stride-2 extraction covers each pixel at most once per kernel tap,
+    and the counts identity col2im(im2col(1)) holds."""
+    counts = np.asarray(overlap_counts((1, 9, 9, 2), 3, 3, stride=2))
+    assert counts.max() <= 9 and counts.min() >= 0
+    ones = jnp.ones((1, 9, 9, 2), jnp.float32)
+    back = col2im(im2col(ones, 3, 3, stride=2), (1, 9, 9, 2), 3, 3, stride=2)
+    np.testing.assert_allclose(np.asarray(back), counts)
+
+
+def test_im2col_default_args_unchanged():
+    """The stride-1/VALID default reproduces the original LeNet extraction."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 10, 10, 3)), jnp.float32)
+    a = im2col(x, 5, 5)
+    b = im2col(x, 5, 5, stride=1, padding="VALID")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert conv_output_hw(10, 10, 5, 5) == (6, 6)
+
+
+# ---------------------------------------------------------------------------
+# fused conv→pool vs the unfused XLA reference (acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pool", ["max2", "avg2"])
+@pytest.mark.parametrize("xshape,kshape,stride,padding", ALL_CASES)
+def test_fused_pool_matches_xla_reference(xshape, kshape, stride, padding, pool):
+    """r=0 fused conv+pool == XLA conv → bias → relu → reduce_window ≤1e-5."""
+    rng = np.random.default_rng(kshape[3] + xshape[1])
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w, sp = _zero_pairing(kshape)
+    b = jnp.asarray(rng.normal(size=(kshape[3],)), jnp.float32)
+
+    got = paired_conv(
+        x, w, b, pairing=sp, activation="relu",
+        stride=stride, padding=padding, pool=pool,
+    )
+    want = _xla_pool(
+        jax.nn.relu(_xla_conv(x, w, b, stride=stride, padding=padding)), pool
+    )
+    assert got.shape == want.shape
+    rel = float(
+        jnp.abs(got - want).max() / jnp.maximum(jnp.abs(want).max(), 1e-30)
+    )
+    assert rel <= 1e-5, f"{pool} {xshape}->{kshape}: rel err {rel:.2e}"
+
+
+def test_pool2_reference_matches_reduce_window():
+    """The pure-jnp pooling oracle trims odd edges exactly like VALID
+    reduce_window (including an odd-sized map)."""
+    rng = np.random.default_rng(11)
+    y = jnp.asarray(rng.normal(size=(2, 7, 9, 5)), jnp.float32)
+    for pool in ("max2", "avg2"):
+        np.testing.assert_allclose(
+            np.asarray(pool2_reference(y, pool)),
+            np.asarray(_xla_pool(y, pool)),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+@pytest.mark.parametrize("pool", ["max2", "avg2"])
+def test_fused_pool_grad_parity(pool):
+    """Custom-VJP gradients through the fused kernel match the XLA path."""
+    xshape, kshape = (2, 14, 14, 6), (5, 5, 6, 16)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w, sp = _zero_pairing(kshape)
+    b = jnp.asarray(rng.normal(size=(kshape[3],)), jnp.float32)
+
+    def loss_fused(x, w, b):
+        y = paired_conv(x, w, b, pairing=sp, activation="relu", pool=pool)
+        return (y ** 2).mean()
+
+    def loss_ref(x, w, b):
+        return (_xla_pool(jax.nn.relu(_xla_conv(x, w, b)), pool) ** 2).mean()
+
+    g_fused = jax.grad(loss_fused, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g_fused, g_ref):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4
+        )
+
+
+def test_fused_pool_positive_rounding_matches_oracle():
+    """At r > 0 the fused kernel equals its folded-dense pooled oracle."""
+    from repro.kernels.paired_conv import paired_conv_ref
+
+    xshape, kshape = (2, 12, 12, 4), (3, 3, 4, 8)
+    rounding = 0.2
+    rng = np.random.default_rng(9)
+    kh, kw, cin, cout = kshape
+    K = kh * kw * cin
+    P = K // 4
+    half = rng.normal(size=(P, cout)) * 0.3 + 1.0
+    rest = rng.normal(size=(K - 2 * P, cout)) * 0.02
+    wm = np.concatenate([half, -half, rest]).astype(np.float32)
+    sp = pair_rows_structured(wm.astype(np.float64), rounding)
+    assert sp.n_pairs >= P
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w = jnp.asarray(wm.reshape(kshape))
+    got = paired_conv(x, w, None, pairing=sp, activation="relu", pool="max2")
+    want = paired_conv_ref(x, w, None, sp, activation="relu", pool="max2")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# LeNet wiring: fuse_pool drops the standalone pooling ops
+# ---------------------------------------------------------------------------
+
+
+def test_lenet_fused_pool_forward_and_schedule():
+    params = init_lenet(jax.random.key(0))
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(size=(2, 32, 32, 1)), jnp.float32
+    )
+    arts = build_conv_pairings(params, 0.0)
+    y_ref = lenet_apply(params, x)
+    y_fused = lenet_apply(
+        params, x, conv_impl="pallas_paired", paired=arts, fuse_pool=True
+    )
+    rel = float(jnp.abs(y_fused - y_ref).max() / jnp.abs(y_ref).max())
+    assert rel <= 1e-5
+
+    # policy-driven, under jit: same result, and the traced program has no
+    # standalone pooling op — each conv layer is exactly one kernel launch
+    # (one HBM writeback)
+    with pallas_conv(paired=arts, fuse_pool=True):
+        y_pol = jax.jit(lambda p, xb: lenet_apply(p, xb))(params, x)
+        jaxpr = jax.make_jaxpr(lambda p, xb: lenet_apply(p, xb))(params, x)
+    np.testing.assert_allclose(
+        np.asarray(y_pol), np.asarray(y_fused), rtol=1e-6, atol=1e-6
+    )
+    assert _count_prims(jaxpr, "reduce_window_max") == 0
+    assert _count_prims(jaxpr, "pallas_call") == 3
+
+    # unfused paired path keeps its two pooling ops
+    with pallas_conv(paired=arts, fuse_pool=False):
+        jaxpr_unfused = jax.make_jaxpr(
+            lambda p, xb: lenet_apply(p, xb)
+        )(params, x)
+    assert _count_prims(jaxpr_unfused, "reduce_window_max") == 2
+
+
+def test_lenet_fused_pool_grad():
+    params = init_lenet(jax.random.key(2))
+    x = jnp.asarray(
+        np.random.default_rng(2).normal(size=(2, 32, 32, 1)), jnp.float32
+    )
+    arts = build_conv_pairings(params, 0.0)
+    g_ref = jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean())(params)
+    with pallas_conv(paired=arts, fuse_pool=True):
+        g = jax.jit(
+            jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean())
+        )(params)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g)):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4
+        )
+
+
+def test_lenet_fuse_pool_ignored_off_pallas_path():
+    """fuse_pool is a no-op for the xla/im2col lowerings (no megakernel)."""
+    params = init_lenet(jax.random.key(3))
+    x = jnp.asarray(
+        np.random.default_rng(3).normal(size=(1, 32, 32, 1)), jnp.float32
+    )
+    y0 = lenet_apply(params, x, conv_impl="xla")
+    y1 = lenet_apply(params, x, conv_impl="xla", fuse_pool=True)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))

@@ -1,0 +1,184 @@
+"""Tile selection: persisted TileCache, measured autotuning, dim clamping.
+
+PR-3 acceptance gate: a warm TileCache hit is consulted in preference to
+the VMEM heuristic, the cache survives a process round-trip (save → fresh
+load), version mismatches are ignored rather than trusted, and
+``choose_blocks`` clamps ``block_m``/``block_n`` to the actual problem dims
+(LeNet conv GEMMs must not budget dead 128×128 tiles).
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import tuning
+from repro.kernels.ops import perf_context
+from repro.kernels.paired_matmul import paired_matmul_pallas
+
+
+def test_choose_blocks_clamps_to_problem_dims():
+    """M=100, N=16 (LeNet conv2 GEMM scale) must not pad out to 128×128."""
+    t = tuning.choose_blocks(100, 16, 0, 150, dtype_bytes=4)
+    assert t.block_m <= 100 and t.block_n <= 16, t
+    # the freed VMEM budget goes to the contraction tile
+    assert t.block_k >= min(150, 128)
+    # power-of-two problems keep their natural tiles
+    big = tuning.choose_blocks(4096, 1024, 0, 4096)
+    assert big.block_m == 128 and big.block_n == 128
+
+
+def test_kernel_vmem_bytes_pool_window():
+    """Fused pooling scales the activation streams and accumulator ×4,
+    never the weight tiles."""
+    base = tuning.kernel_vmem_bytes(64, 64, 128, pool_window=1)
+    pooled = tuning.kernel_vmem_bytes(64, 64, 128, pool_window=4)
+    assert pooled > base
+    # weight tiles: 2 segments × (bk·bn) × 2 buffers × dtype_bytes
+    w_bytes = 2 * (128 * 64) * 2 * 2
+    x_bytes = base - w_bytes - (64 * 64 * 4 + 64 * 64 * 2)
+    assert pooled == base + 3 * x_bytes + 3 * 64 * 64 * 4
+
+
+def test_tile_cache_round_trip_and_version(tmp_path):
+    path = tmp_path / "tc.json"
+    key = tuning.cache_key(100, 16, 20, 110, dtype="float32", pool="max2")
+    assert key == "M100-N16-K150-float32-p20r110-max2"
+    c = tuning.TileCache(path)
+    assert c.get(key) is None
+    c.put(key, tuning.TileConfig(50, 16, 128), time_s=0.01)
+    c.save()
+    # fresh instance (new process simulation) sees the entry
+    c2 = tuning.TileCache(path)
+    assert c2.get(key) == tuning.TileConfig(50, 16, 128)
+    # version mismatch → load as empty, never trust a stale schema
+    raw = json.loads(path.read_text())
+    raw["version"] = 99
+    path.write_text(json.dumps(raw))
+    assert len(tuning.TileCache(path)) == 0
+    # corrupt file → load as empty
+    path.write_text("{not json")
+    assert len(tuning.TileCache(path)) == 0
+
+
+def test_warm_cache_hit_beats_heuristic(tmp_path):
+    """choose_blocks must return the cached (measured) config, not the
+    heuristic's, when the active TileCache holds the problem key."""
+    path = tmp_path / "tc.json"
+    M, N, P, R = 100, 16, 20, 110
+    heur = tuning.choose_blocks(M, N, P, R, dtype_bytes=4, dtype="float32")
+    cached = tuning.TileConfig(50, 8, 64)
+    assert cached != heur
+    c = tuning.TileCache(path)
+    c.put(
+        tuning.cache_key(M, N, P, R, dtype="float32", dtype_bytes=4),
+        cached,
+    )
+    c.save()
+
+    with tuning.use_tile_cache(path):
+        assert tuning.choose_blocks(
+            M, N, P, R, dtype_bytes=4, dtype="float32"
+        ) == cached
+        # a different problem (or pool mode) misses → heuristic
+        assert tuning.choose_blocks(
+            M, N, P, R, dtype_bytes=4, dtype="float32", pool="max2"
+        ) == tuning.choose_blocks(
+            M, N, P, R, dtype_bytes=4, dtype="float32", pool="max2",
+            use_cache=False,
+        )
+    # outside the context the cache is inactive again
+    assert tuning.active_tile_cache() is None
+    assert tuning.choose_blocks(M, N, P, R, dtype_bytes=4, dtype="float32") == heur
+
+
+def test_resolve_blocks_explicit_beats_cache(tmp_path):
+    """Explicit block sizes always win over cache and heuristic."""
+    path = tmp_path / "tc.json"
+    c = tuning.TileCache(path)
+    c.put(tuning.cache_key(64, 64, 0, 64, dtype="float32", dtype_bytes=4),
+          tuning.TileConfig(8, 8, 8))
+    c.save()
+    with tuning.use_tile_cache(path):
+        t = tuning.resolve_blocks(
+            64, 64, 0, 64, block_m=32, block_n=16, block_k=64,
+            dtype_bytes=4, dtype="float32",
+        )
+    assert t == tuning.TileConfig(32, 16, 64)
+
+
+def test_autotune_persists_winner(tmp_path):
+    """autotune_blocks measures real kernel runs and writes the winner
+    through to the cache choose_blocks consults."""
+    rng = np.random.default_rng(0)
+    M, N, P, R = 32, 16, 8, 24
+    x = jnp.asarray(rng.normal(size=(M, 2 * P + R)), jnp.float32)
+    km = jnp.asarray(rng.normal(size=(P, N)), jnp.float32)
+    wr = jnp.asarray(rng.normal(size=(R, N)), jnp.float32)
+    calls = []
+
+    def runner(cfg):
+        calls.append(cfg)
+        return paired_matmul_pallas(
+            x, km, wr, block_m=cfg.block_m, block_n=cfg.block_n,
+            block_k=cfg.block_k, interpret=True,
+        )
+
+    cache = tuning.TileCache(tmp_path / "tc.json")
+    best, records = tuning.autotune_blocks(
+        runner, M, N, P, R, dtype_bytes=4, dtype="float32",
+        cache=cache, reps=1, warmup=0,
+    )
+    assert calls and len(records) == len(set(calls))
+    assert all(r["time_s"] > 0 and r["vmem_bytes"] > 0 for r in records)
+    # winner is a measured candidate and now wins tile selection
+    with tuning.use_tile_cache(tuning.TileCache(cache.path)):
+        assert tuning.choose_blocks(
+            M, N, P, R, dtype_bytes=4, dtype="float32"
+        ) == best
+
+
+def test_perf_context_installs_tile_cache(tmp_path):
+    """PerfKnobs(tile_cache=path) activates the cache during the trace."""
+    path = tmp_path / "tc.json"
+    tuning.TileCache(path).save()
+
+    class Knobs:
+        gemm = "xla"
+        conv = "xla"
+        tile_cache = str(path)
+
+    assert tuning.active_tile_cache() is None
+    with perf_context(Knobs()):
+        active = tuning.active_tile_cache()
+        assert active is not None and active.path == path
+    assert tuning.active_tile_cache() is None
+
+    class NoCache:
+        gemm = "xla"
+        conv = "xla"
+        tile_cache = ""
+
+    with perf_context(NoCache()):
+        assert tuning.active_tile_cache() is None
+
+
+def test_candidate_configs_fit_vmem():
+    for M, N, P, R, pool in [
+        (100, 16, 20, 110, "none"),
+        (196, 16, 30, 90, "max2"),
+        (4096, 12288, 3000, 6288, "none"),
+    ]:
+        cands = tuning.candidate_configs(M, N, P, R, pool=pool)
+        assert cands, (M, N, P, R)
+        pw = 4 if pool != "none" else 1
+        for c in cands:
+            assert c.block_m <= max(M, 8) and c.block_n <= max(N, 8)
+            assert tuning.kernel_vmem_bytes(
+                c.block_m, c.block_n, min(c.block_k, max(P, R, 1)),
+                has_pairs=P > 0, has_resid=R > 0, pool_window=pw,
+            ) <= tuning.VMEM_BUDGET_BYTES
+
+
+def test_measure_returns_positive_time():
+    t = tuning.measure(lambda: sum(range(100)), reps=2, warmup=1)
+    assert t > 0
