@@ -51,19 +51,31 @@ def paired_lenet(params, rounding: float):
     return new, OpCounts(mults=mults, adds=adds, subs=subs)
 
 
-def measured_conv_path(params, test_x, rounding: float, batch: int = 32) -> dict:
+def measured_conv_path(
+    params,
+    test_x,
+    rounding: float,
+    batch: int = 32,
+    mode: str = "structured",
+    block_n: int = 0,
+) -> dict:
     """Execute LeNet through the paired Pallas conv path and *measure* it.
 
     Unlike the analytic ledger above (per-column Algorithm 1, modeled), this
-    builds the structured per-conv-layer artifacts the kernel actually
-    consumes, runs the forward, and reports the op counts the kernel
-    executed: per layer, baseline MXU lanes (== the paper's multiply count),
-    lanes after pairing, and VPU subtracts per image — plus the max output
-    deviation from the XLA conv reference on a real test batch.
+    builds the per-conv-layer artifacts the kernel actually consumes
+    (``mode``/``block_n`` pick the pairing-spectrum point: structured,
+    column-blocked, or per-column at ``block_n=1``), runs the forward, and
+    reports the op counts the kernel executed: per layer, baseline MXU lanes
+    (== the paper's multiply count), lanes after pairing, and VPU subtracts
+    per image — plus the max output deviation from the XLA conv reference on
+    a real test batch.
     """
     import jax.numpy as jnp
 
-    arts = build_conv_pairings(params, rounding, positions=LENET_CONV_POSITIONS)
+    arts = build_conv_pairings(
+        params, rounding, positions=LENET_CONV_POSITIONS,
+        mode=mode, block_n=block_n,
+    )
     xb = jnp.asarray(test_x[:batch], jnp.float32)
     y_ref = np.asarray(lenet_apply(params, xb, conv_impl="xla"))
     y_pal = np.asarray(
@@ -87,6 +99,8 @@ def measured_conv_path(params, test_x, rounding: float, batch: int = 32) -> dict
     return {
         "rounding": rounding,
         "batch": batch,
+        "mode": mode,
+        "block_n": block_n,
         "per_layer": per_layer,
         "total_baseline_lanes": total_baseline,
         "total_paired_lanes": sum(v["paired_lanes"] for v in per_layer.values()),
@@ -98,6 +112,60 @@ def measured_conv_path(params, test_x, rounding: float, batch: int = 32) -> dict
     }
 
 
+def pairing_block_sweep(params, rounding: float, block_ns=None) -> dict:
+    """Pairing rate vs block size at one rounding — the spectrum the
+    column-blocked kernel opens between structured and per-column pairing.
+
+    For each ``block_n`` (1 == per-column, growing toward structured) the
+    conv artifacts are rebuilt and the executed pairing rate recorded:
+    ``lanes_saved / baseline_lanes`` (the fraction of MXU lanes the paper's
+    subtractor trick removes) plus the VPU subtracts per image the blocked
+    kernel pays for it.  ``structured`` is the ∞-block endpoint.
+    """
+    from repro.core.pairing import pair_columns
+
+    if block_ns is None:
+        block_ns = (1, 2, 4, 8, 16)
+    points = {}
+
+    def record(tag, arts):
+        counts = [a.measured_op_counts() for a in arts.values()]
+        baseline = sum(c["baseline_lanes"] for c in counts)
+        saved = sum(c["lanes_saved"] for c in counts)
+        points[tag] = {
+            "lanes_saved": saved,
+            "pair_rate": saved / baseline,
+            "subs_per_image": sum(c["subs_executed"] for c in counts),
+        }
+
+    record("structured", build_conv_pairings(
+        params, rounding, positions=LENET_CONV_POSITIONS))
+    for bn in block_ns:
+        record(f"block_{bn}", build_conv_pairings(
+            params, rounding, positions=LENET_CONV_POSITIONS,
+            mode="column_blocked", block_n=bn,
+        ))
+
+    # the analytic (non-executable reference) per-column rate for comparison
+    analytic_pairs = 0
+    baseline = 0
+    for name, (shape, pos) in LENET_CONV_SHAPES.items():
+        k = np.asarray(params[name]["w"], np.float64)
+        H, W, Cin, Cout = k.shape
+        cp = pair_columns(k.reshape(H * W * Cin, Cout), rounding)
+        analytic_pairs += cp.total_pairs * pos
+        baseline += k.size * pos
+    points["analytic_per_column"] = {
+        "lanes_saved": analytic_pairs,
+        "pair_rate": analytic_pairs / baseline,
+    }
+    # block_n=1 *is* the analytic pairing, executed
+    assert points["block_1"]["lanes_saved"] == analytic_pairs, (
+        points["block_1"]["lanes_saved"], analytic_pairs,
+    )
+    return {"rounding": rounding, "points": points}
+
+
 def fused_pool_path(params, test_x, batch: int = 32) -> dict:
     """Fused conv→pool megakernel vs the unfused schedules, measured.
 
@@ -107,7 +175,11 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
     * ``paired_unfused`` — the Pallas paired conv, pooling still a separate
       XLA op (full activation map round-trips HBM),
     * ``paired_fused`` — the megakernel: bias → relu → 2×2 max reduce inside
-      VMEM, one HBM writeback per conv layer.
+      VMEM, one HBM writeback per conv layer,
+    * ``paired_fused_blocked`` — the same megakernel through the
+      column-blocked layout (block_n=4 artifacts): the schedule audit must
+      hold identically — per-block segment metadata adds no extra pooling
+      op or kernel launch.
 
     Besides wall-clock, each variant's *traced program* is audited:
     ``pool_ops`` counts standalone ``reduce_window_max`` primitives (must be
@@ -120,6 +192,10 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
     import jax.numpy as jnp
 
     arts = build_conv_pairings(params, 0.0, positions=LENET_CONV_POSITIONS)
+    barts = build_conv_pairings(
+        params, 0.0, positions=LENET_CONV_POSITIONS,
+        mode="column_blocked", block_n=4,
+    )
     xb = jnp.asarray(test_x[:batch], jnp.float32)
 
     variants = {
@@ -128,6 +204,8 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
                                fuse_pool=False),
         "paired_fused": dict(conv_impl="pallas_paired", paired=arts,
                              fuse_pool=True),
+        "paired_fused_blocked": dict(conv_impl="pallas_paired", paired=barts,
+                                     fuse_pool=True),
     }
     out: dict = {}
     y_ref = None
@@ -149,20 +227,23 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
             ),
         }
 
-    fused = out["paired_fused"]
-    assert fused["pool_ops"] == 0, (
-        "fused conv path still launches a standalone pooling op "
-        f"({fused['pool_ops']} reduce_window_max in the traced program)"
-    )
-    assert fused["conv_kernel_launches"] == len(arts), (
-        f"expected one kernel writeback per conv layer ({len(arts)}), "
-        f"traced {fused['conv_kernel_launches']}"
-    )
+    # the schedule audit must hold on both fused layouts (shared-permutation
+    # and column-blocked): zero standalone pool ops, one writeback per conv
+    for tag, tag_arts in (("paired_fused", arts), ("paired_fused_blocked", barts)):
+        fused = out[tag]
+        assert fused["pool_ops"] == 0, (
+            f"{tag} still launches a standalone pooling op "
+            f"({fused['pool_ops']} reduce_window_max in the traced program)"
+        )
+        assert fused["conv_kernel_launches"] == len(tag_arts), (
+            f"{tag}: expected one kernel writeback per conv layer "
+            f"({len(tag_arts)}), traced {fused['conv_kernel_launches']}"
+        )
+        assert fused["rel_err_vs_xla"] <= 1e-5, (
+            f"{tag} at rounding 0 must match the XLA reference: "
+            f"rel err {fused['rel_err_vs_xla']:.2e}"
+        )
     assert out["paired_unfused"]["pool_ops"] == 2  # the two pooled layers
-    assert fused["rel_err_vs_xla"] <= 1e-5, (
-        "fused conv→pool at rounding 0 must match the XLA reference: "
-        f"rel err {fused['rel_err_vs_xla']:.2e}"
-    )
     return {"batch": batch, "variants": out}
 
 
@@ -222,10 +303,31 @@ def run(quick: bool = False) -> dict:
         # paper's per-column pairing before it engages on trained weights —
         # record a point where the kernel actually executes subtractions
         "r_structured": measured_conv_path(params, test_x, 0.3, batch=batch),
+        # the column-blocked layout executes a nontrivial pairing rate at the
+        # paper's *headline* rounding (structured stays at 0 there): r=0
+        # parity gates the layout, headline records what it buys
+        "r0_blocked": measured_conv_path(
+            params, test_x, 0.0, batch=batch, mode="column_blocked", block_n=4
+        ),
+        "headline_blocked": measured_conv_path(
+            params, test_x, 0.05, batch=batch,
+            mode="column_blocked", block_n=4,
+        ),
+        "headline_per_column": measured_conv_path(
+            params, test_x, 0.05, batch=batch,
+            mode="column_blocked", block_n=1,
+        ),
     }
-    assert measured["r0"]["rel_err_vs_xla"] <= 1e-5, (
-        "paired Pallas conv at rounding 0 must match the XLA reference: "
-        f"relative err {measured['r0']['rel_err_vs_xla']:.2e}"
+    for tag in ("r0", "r0_blocked"):
+        assert measured[tag]["rel_err_vs_xla"] <= 1e-5, (
+            f"paired Pallas conv ({tag}) at rounding 0 must match the XLA "
+            f"reference: relative err {measured[tag]['rel_err_vs_xla']:.2e}"
+        )
+
+    # pairing rate vs block size at the headline rounding (the gap the
+    # column-blocked kernel layout closes)
+    block_sweep = pairing_block_sweep(
+        params, 0.05, block_ns=(1, 4) if quick else (1, 2, 4, 8, 16)
     )
 
     # fused conv→pool megakernel: wall-clock vs the unfused schedules plus
@@ -238,6 +340,7 @@ def run(quick: bool = False) -> dict:
         "data_source": info["source"],
         "kernel_tile_configs": tile_configs,
         "measured_conv_path": measured,
+        "pairing_block_sweep": block_sweep,
         "fused_pool_path": fused,
         "conv3_weight_distribution": dist,
         "paper_headline": {
@@ -250,6 +353,7 @@ def run(quick: bool = False) -> dict:
         # into BENCH_fig8.json; CI gates on fused.pool_ops == 0)
         "perf_summary": {
             "fused_pool": fused,
+            "pairing_block_sweep": block_sweep,
             "kernel_tile_configs": tile_configs,
             "kernel_op_counts": {
                 tag: {
@@ -262,14 +366,19 @@ def run(quick: bool = False) -> dict:
         },
     }
     print(fmt_table(rows, list(rows[0].keys()), "Fig. 8: trade-off per rounding size"))
-    for tag in ("headline", "r_structured"):
+    for tag in ("headline", "r_structured", "headline_blocked", "headline_per_column"):
         m = measured[tag]
+        mode = m["mode"] if m["block_n"] == 0 else f"blocked(n={m['block_n']})"
         print(
-            f"measured paired-conv path @ r={m['rounding']}: "
+            f"measured paired-conv path [{mode}] @ r={m['rounding']}: "
             f"{m['total_baseline_lanes']} baseline MXU lanes/image → "
             f"{m['total_paired_lanes']} paired, {m['total_subs_per_image']} "
             f"VPU subs/image"
         )
+    print("pairing rate vs block size @ r=0.05: " + ", ".join(
+        f"{tag}={p['pair_rate']:.3f}"
+        for tag, p in block_sweep["points"].items()
+    ))
     print(
         f"r=0 err vs XLA conv: abs {measured['r0']['max_abs_err_vs_xla']:.2e} "
         f"rel {measured['r0']['rel_err_vs_xla']:.2e}"

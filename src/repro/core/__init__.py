@@ -4,10 +4,12 @@ from repro.core.pairing import (  # noqa: F401
     PairingResult,
     ColumnPairing,
     StructuredPairing,
+    BlockedPairing,
     pair_list_twopointer,
     pair_columns,
     fold_columns,
     pair_rows_structured,
+    pair_rows_blocked,
     pairing_op_counts,
     column_pairing_for_conv,
     sweep_rounding,

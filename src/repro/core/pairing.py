@@ -23,6 +23,14 @@ Three implementations live here:
    so the paired computation stays a dense GEMM with a reduced contraction
    dimension (see kernels/paired_matmul.py).  The per-column magnitude is kept
    exact; only the symmetric part of the paired rows is dropped, bounded by r.
+4. ``pair_rows_blocked``     — the spectrum between (2) and (3): one shared-row
+   pairing per group of ``block_n`` output neurons.  ``block_n == N`` is
+   exactly (3); ``block_n == 1`` reproduces the paper's per-column pairing
+   (2) index-for-index, because the structured greedy walk on a single
+   column degenerates to Algorithm 1.  Smaller blocks pair more lanes at
+   equal rounding (the constraint "one pairing shared by the whole block"
+   weakens), at the cost of per-block kernel metadata
+   (see kernels/paired_matmul.py, "Column-blocked layout").
 
 All pairing is offline preprocessing (runs once, numpy), exactly as in the
 paper ("the weights preprocessing occurs once before deploying the weights").
@@ -259,6 +267,13 @@ class StructuredPairing:
     def n_pairs(self) -> int:
         return int(self.I.shape[0])
 
+    @property
+    def weighted_pairs(self) -> int:
+        """Per-column-equivalent pair count: every shared pair removes one
+        contraction lane for each of the N columns it spans (the quantity
+        Table I compares across pairing modes)."""
+        return self.n_pairs * int(self.shape[1])
+
     def fold(self) -> np.ndarray:
         """Dense W_approx equivalent (for accuracy eval / oracle)."""
         K, N = self.shape
@@ -297,7 +312,12 @@ def pair_rows_structured(
     K, N = W.shape
     mean = W.mean(axis=1)
     pos_idx = np.nonzero(mean > 0)[0]
-    neg_idx = np.nonzero(mean <= 0)[0]
+    # Exactly-zero mean rows never pair (Algorithm 1 skips zero weights);
+    # retiring them here also makes the N == 1 case degenerate *exactly* to
+    # ``pair_list_twopointer``, which ``pair_rows_blocked(block_n=1)`` relies
+    # on to reproduce the paper's per-column ledger.
+    neg_idx = np.nonzero(mean < 0)[0]
+    zero_idx = np.nonzero(mean == 0)[0]
     pos_idx = pos_idx[np.argsort(mean[pos_idx], kind="stable")]
     neg_idx = neg_idx[np.argsort(-mean[neg_idx], kind="stable")]
 
@@ -339,6 +359,7 @@ def pair_rows_structured(
                 pn += 1
     resid.extend(int(i) for i in pos_idx[pp:])
     resid.extend(int(j) for j in neg_idx[pn:])
+    resid.extend(int(z) for z in zero_idx)
 
     I_a = np.asarray(I, dtype=np.int64)
     J_a = np.asarray(J, dtype=np.int64)
@@ -347,6 +368,160 @@ def pair_rows_structured(
     return StructuredPairing(
         I=I_a, J=J_a, Kmat=Kmat, resid=R_a, W_res=W[R_a], shape=(K, N)
     )
+
+
+# ---------------------------------------------------------------------------
+# 4. Column-blocked pairing: one shared-row pairing per group of block_n cols
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockedPairing:
+    """Independent :class:`StructuredPairing` per contiguous block of columns.
+
+    ``blocks[b]`` pairs columns ``[b·block_n, min((b+1)·block_n, N))`` of the
+    (K, N) weight matrix; only the *last* block may span fewer than
+    ``block_n`` columns.  ``block_n == N`` collapses to a single structured
+    pairing; ``block_n == 1`` is the paper's per-column pairing
+    (one Algorithm-1 walk per output neuron).
+
+    The kernel consumes the *packed* layout built by :meth:`index_arrays`:
+    every block's ``[I | J | resid]`` lane lists padded to the common
+    ``(Pmax, Rmax)`` so one ``(n_blocks, 2·Pmax + Rmax)`` index matrix (and
+    one gather) covers all blocks — padded lanes point at row 0 and carry
+    zero weights, so they contribute nothing to the contraction.
+    """
+
+    blocks: list[StructuredPairing]
+    block_n: int
+    shape: tuple[int, int]
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def n_pairs(self) -> int:
+        """Subtractions the kernel executes per output position: each block
+        computes its own x[I]−x[J] differences, shared by its columns."""
+        return sum(sp.n_pairs for sp in self.blocks)
+
+    @property
+    def weighted_pairs(self) -> int:
+        """Per-column-equivalent pairs (MXU lanes saved per output position):
+        a pair in a block of n_b columns removes one lane from each."""
+        return sum(sp.n_pairs * sp.shape[1] for sp in self.blocks)
+
+    @property
+    def Pmax(self) -> int:
+        return max((sp.n_pairs for sp in self.blocks), default=0)
+
+    @property
+    def Rmax(self) -> int:
+        return max((len(sp.resid) for sp in self.blocks), default=0)
+
+    def block_cols(self, b: int) -> tuple[int, int]:
+        """[start, stop) column range of block ``b``."""
+        start = b * self.block_n
+        return start, min(start + self.block_n, self.shape[1])
+
+    def fold(self) -> np.ndarray:
+        """Dense W_approx equivalent (accuracy eval / kernel oracle)."""
+        K, N = self.shape
+        Wf = np.zeros((K, N))
+        for b, sp in enumerate(self.blocks):
+            lo, hi = self.block_cols(b)
+            Wf[:, lo:hi] = sp.fold()
+        return Wf
+
+    def index_arrays(self) -> dict[str, np.ndarray]:
+        """Packed per-block lane metadata for the blocked Pallas kernel.
+
+        Returns int64 / float64 arrays:
+
+        * ``I``, ``J`` — (n_blocks, Pmax) paired row indices, padded with 0;
+        * ``resid``    — (n_blocks, Rmax) residual row indices, padded with 0;
+        * ``pair_mask`` / ``resid_mask`` — (n_blocks, Pmax/Rmax) 1.0 on real
+          entries, 0.0 on padding (multiplied into the packed weight
+          segments, so padded lanes contract against zeros);
+        * ``perm``     — (n_blocks, 2·Pmax + Rmax) = [I | J | resid] per
+          block: the packed lane-permutation matrix one activation gather
+          consumes.
+        """
+        B, P, R = self.n_blocks, self.Pmax, self.Rmax
+        I_m = np.zeros((B, P), dtype=np.int64)
+        J_m = np.zeros((B, P), dtype=np.int64)
+        R_m = np.zeros((B, R), dtype=np.int64)
+        pmask = np.zeros((B, P))
+        rmask = np.zeros((B, R))
+        for b, sp in enumerate(self.blocks):
+            p, r = sp.n_pairs, len(sp.resid)
+            I_m[b, :p] = sp.I
+            J_m[b, :p] = sp.J
+            R_m[b, :r] = sp.resid
+            pmask[b, :p] = 1.0
+            rmask[b, :r] = 1.0
+        return {
+            "I": I_m,
+            "J": J_m,
+            "resid": R_m,
+            "pair_mask": pmask,
+            "resid_mask": rmask,
+            "perm": np.concatenate([I_m, J_m, R_m], axis=1),
+        }
+
+    def packed_weights(self) -> tuple[np.ndarray, np.ndarray]:
+        """Offline (Kmat, W_res) in the kernel's packed block-major layout.
+
+        ``Kmat`` is (n_blocks, Pmax, block_n) and ``W_res`` is
+        (n_blocks, Rmax, block_n); padded rows *and* the short last block's
+        padded columns are zero.  The live-weight analogue (differentiable,
+        recomputed inside the trace) lives in ``kernels.paired_conv``.
+        """
+        B, P, R, bn = self.n_blocks, self.Pmax, self.Rmax, self.block_n
+        km = np.zeros((B, max(P, 0), bn))
+        wr = np.zeros((B, max(R, 0), bn))
+        for b, sp in enumerate(self.blocks):
+            lo, hi = self.block_cols(b)
+            ncols = hi - lo
+            km[b, : sp.n_pairs, :ncols] = sp.Kmat
+            wr[b, : len(sp.resid), :ncols] = sp.W_res
+        return km, wr
+
+
+def pair_rows_blocked(
+    W: np.ndarray,
+    rounding: float,
+    block_n: int,
+    *,
+    criterion: str = "rms",
+) -> BlockedPairing:
+    """One structured (shared-row) pairing per group of ``block_n`` columns.
+
+    The spectrum knob between the kernel-native structured pairing and the
+    paper's per-column pairing:
+
+    * ``block_n >= N`` — a single block: identical to
+      :func:`pair_rows_structured` (same I/J/resid).
+    * ``block_n == 1`` — one block per column: identical pair indices and
+      magnitudes to :func:`pair_columns` / Algorithm 1 (the greedy walk on a
+      one-column mean profile *is* Algorithm 1, and the symmetric-error check
+      coincides with the rounding window).
+
+    Smaller blocks weaken the shared-row constraint, so the weighted pair
+    count is (weakly) monotone as ``block_n`` shrinks on real weights.
+    """
+    W = np.asarray(W, dtype=np.float64)
+    assert W.ndim == 2, "pair_rows_blocked expects (K, N)"
+    K, N = W.shape
+    assert block_n >= 1, f"block_n must be >= 1, got {block_n}"
+    block_n = min(block_n, N)
+    blocks = [
+        pair_rows_structured(W[:, lo : min(lo + block_n, N)], rounding,
+                             criterion=criterion)
+        for lo in range(0, N, block_n)
+    ]
+    return BlockedPairing(blocks=blocks, block_n=block_n, shape=(K, N))
 
 
 # ---------------------------------------------------------------------------

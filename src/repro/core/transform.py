@@ -24,10 +24,12 @@ import numpy as np
 
 from repro.core.cost_model import AsicCostModel, OpCounts
 from repro.core.pairing import (
+    BlockedPairing,
     ColumnPairing,
     StructuredPairing,
     fold_columns,
     pair_columns,
+    pair_rows_blocked,
     pair_rows_structured,
 )
 
@@ -39,7 +41,7 @@ class LeafReport:
     n_weights: int
     n_pairs: int
     pair_fraction: float  # fraction of weights absorbed into pairs (2P/K·N)
-    pairing: ColumnPairing | StructuredPairing | None = None
+    pairing: ColumnPairing | StructuredPairing | BlockedPairing | None = None
 
 
 @dataclasses.dataclass
@@ -95,28 +97,34 @@ class PairedLayer:
     name: str
     kernel_shape: tuple[int, ...]  # (kh, kw, cin, cout)
     rounding: float
-    pairing: StructuredPairing
+    pairing: StructuredPairing | BlockedPairing
     positions: int = 1  # output spatial positions per image (conv M-dim)
 
     @property
     def n_pairs(self) -> int:
+        """Subtractions the kernel executes per output position (for a
+        BlockedPairing: summed over blocks — each block subtracts its own
+        x[I]−x[J] differences)."""
         return self.pairing.n_pairs
 
     def measured_op_counts(self) -> dict[str, int]:
         """What the paired kernel *executes* per inference image.
 
         Baseline MXU lanes equal the paper's multiply count for the layer
-        (K·N·positions); every shared pair removes one contraction lane for
-        all N output channels and runs one VPU subtract per position.
+        (K·N·positions); every pair removes one contraction lane from each
+        column it spans (all N for structured, its block's columns for
+        column-blocked — ``weighted_pairs`` counts exactly that) and runs
+        one VPU subtract per position.
         """
         kh, kw, cin, cout = self.kernel_shape
         K, N = kh * kw * cin, cout
-        P = self.n_pairs
+        baseline = K * N * self.positions
+        saved = self.pairing.weighted_pairs * self.positions
         return {
-            "baseline_lanes": K * N * self.positions,
-            "paired_lanes": (K - P) * N * self.positions,
-            "lanes_saved": P * N * self.positions,
-            "subs_executed": P * self.positions,
+            "baseline_lanes": baseline,
+            "paired_lanes": baseline - saved,
+            "lanes_saved": saved,
+            "subs_executed": self.n_pairs * self.positions,
         }
 
 
@@ -126,16 +134,27 @@ def build_conv_pairings(
     *,
     positions: dict[str, int] | None = None,
     criterion: str = "rms",
+    mode: str = "structured",
+    block_n: int = 0,
 ) -> dict[str, PairedLayer]:
     """Emit a :class:`PairedLayer` artifact for every conv leaf of ``params``.
 
     ``params`` is a ``{layer_name: {"w": (kh, kw, cin, cout), ...}}`` tree
     (the LeNet layout); each 4-D float ``w`` is flattened to the im2col GEMM
-    matrix (K, N) and paired with the structured (shared-row) pairing the
-    Pallas kernel consumes.  ``positions`` maps layer names to output spatial
+    matrix (K, N) and paired for the Pallas kernel.  ``mode`` selects the
+    pairing spectrum point: ``"structured"`` (default — one shared-row
+    pairing for all N output channels), ``"column_blocked"`` (one pairing
+    per ``block_n`` output channels; requires ``block_n >= 1``), or
+    ``"per_column"`` (the paper's pairing — sugar for column_blocked with
+    ``block_n=1``).  ``positions`` maps layer names to output spatial
     positions (e.g. ``models.lenet.LENET_CONV_POSITIONS``) so the artifacts
     can report measured per-image op counts.
     """
+    if mode == "per_column":
+        mode, block_n = "column_blocked", 1
+    assert mode in ("structured", "column_blocked"), f"unknown mode {mode!r}"
+    if mode == "column_blocked" and block_n < 1:
+        raise ValueError("mode='column_blocked' needs block_n >= 1")
     arts: dict[str, PairedLayer] = {}
     for name, leaf in params.items():
         if not isinstance(leaf, dict) or "w" not in leaf:
@@ -144,11 +163,13 @@ def build_conv_pairings(
         if w.ndim != 4 or w.dtype.kind != "f":
             continue
         kh, kw, cin, cout = w.shape
-        sp = pair_rows_structured(
-            w.reshape(kh * kw * cin, cout).astype(np.float64),
-            rounding,
-            criterion=criterion,
-        )
+        wm = w.reshape(kh * kw * cin, cout).astype(np.float64)
+        if mode == "column_blocked":
+            sp: StructuredPairing | BlockedPairing = pair_rows_blocked(
+                wm, rounding, block_n, criterion=criterion
+            )
+        else:
+            sp = pair_rows_structured(wm, rounding, criterion=criterion)
         arts[name] = PairedLayer(
             name=name,
             kernel_shape=tuple(w.shape),
@@ -168,6 +189,7 @@ def pair_model_params(
     rounding: float,
     *,
     mode: str = "per_column",
+    block_n: int = 0,
     min_dim: int = 8,
     predicate: Callable[[str, np.ndarray], bool] | None = None,
     keep_pairings: bool = False,
@@ -180,9 +202,18 @@ def pair_model_params(
     as the paper does for LeNet-5; 2-D leaves (K, N) are paired per column
     (= per output neuron).
 
+    ``mode`` picks the pairing spectrum point: ``"per_column"`` (the paper's
+    Algorithm 1, default), ``"structured"`` (one shared-row pairing per
+    leaf — the original TPU kernel layout), or ``"column_blocked"`` (one
+    shared-row pairing per ``block_n`` output columns — the kernel-executable
+    mode that closes most of the structured-vs-per-column pairing gap;
+    requires ``block_n >= 1``).
+
     Returns (paired_params, report).  ``paired_params`` has the same treedef;
     only eligible leaves are replaced by their folded equivalents.
     """
+    if mode == "column_blocked" and block_n < 1:
+        raise ValueError("mode='column_blocked' needs block_n >= 1")
     leaves_report: list[LeafReport] = []
 
     def handle(path, leaf):
@@ -207,12 +238,17 @@ def pair_model_params(
             cp = pair_columns(mat64, rounding)
             folded = fold_columns(mat64, cp)
             n_pairs = cp.total_pairs
-            pairing: ColumnPairing | StructuredPairing = cp
+            pairing: ColumnPairing | StructuredPairing | BlockedPairing = cp
         elif mode == "structured":
             sp = pair_rows_structured(mat64, rounding)
             folded = sp.fold()
-            n_pairs = sp.n_pairs * mat.shape[1]  # one pair row spans N columns
+            n_pairs = sp.weighted_pairs  # one pair row spans N columns
             pairing = sp
+        elif mode == "column_blocked":
+            bp = pair_rows_blocked(mat64, rounding, block_n)
+            folded = bp.fold()
+            n_pairs = bp.weighted_pairs  # per-column-equivalent count
+            pairing = bp
         else:
             raise ValueError(f"unknown mode {mode!r}")
 

@@ -26,9 +26,13 @@ import threading
 import jax
 import jax.numpy as jnp
 
-from repro.core.pairing import StructuredPairing
+from repro.core.pairing import BlockedPairing, StructuredPairing
 from repro.kernels import tuning
-from repro.kernels.paired_matmul import dense_matmul_pallas, paired_matmul_pallas
+from repro.kernels.paired_matmul import (
+    dense_matmul_pallas,
+    paired_matmul_blocked_pallas,
+    paired_matmul_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -113,6 +117,73 @@ def dense_matmul(
         x2, w, bias,
         block_m=tiles.block_m, block_n=tiles.block_n, block_k=tiles.block_k,
         activation=activation, interpret=interp,
+    )
+    return y.reshape(*lead, y.shape[-1])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_cols", "block_m", "block_k", "activation", "pool", "interpret",
+    ),
+)
+def paired_matmul_blocked(
+    x: jax.Array,
+    kmat: jax.Array,
+    w_res: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    n_cols: int,
+    block_m: int = 0,
+    block_k: int = 0,
+    activation: str = "none",
+    pool: str = "none",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Column-blocked paired GEMM → (M, n_cols).
+
+    ``x`` is block-gathered ``(B, M, K')`` (window-major ``(B, 4, M, K')``
+    with pooling), ``kmat``/``w_res`` the packed per-block weight segments —
+    see :func:`repro.kernels.paired_matmul.paired_matmul_blocked_pallas`.
+    The lane tile is pinned to the pairing block size; ``block_m``/
+    ``block_k = 0`` resolve through the tile cache / heuristic under a
+    blocked cache key.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    B, P, bn = kmat.shape
+    R = w_res.shape[1]
+    tiles = tuning.resolve_blocks(
+        x.shape[-2], bn, P, R,
+        block_m=block_m, block_n=bn, block_k=block_k,
+        dtype_bytes=x.dtype.itemsize, dtype=x.dtype.name, pool=pool,
+        blocks=B,
+    )
+    return paired_matmul_blocked_pallas(
+        x, kmat, w_res, bias,
+        n_cols=n_cols, block_m=tiles.block_m, block_k=tiles.block_k,
+        activation=activation, pool=pool, interpret=interp,
+    )
+
+
+def apply_blocked_pairing(
+    x: jax.Array, bp: BlockedPairing, **kw
+) -> jax.Array:
+    """Evaluate x @ W through the blocked kernel given a BlockedPairing.
+
+    The blocked analogue of :func:`apply_structured_pairing`: gathers the
+    activations through the packed ``(n_blocks, K')`` index matrix (one XLA
+    gather covering every block's ``[I | J | resid]`` permutation) and packs
+    the offline per-block weight segments.  For the live-weight
+    (differentiable) variant see ``kernels.paired_conv``.
+    """
+    lead = x.shape[:-1]
+    idx = bp.index_arrays()
+    xg = jnp.take(x.reshape(-1, x.shape[-1]), jnp.asarray(idx["perm"]), axis=-1)
+    xg = jnp.moveaxis(xg, 1, 0)  # (B, M, K')
+    kmat, w_res = bp.packed_weights()
+    y = paired_matmul_blocked(
+        xg, jnp.asarray(kmat, x.dtype), jnp.asarray(w_res, x.dtype),
+        n_cols=bp.shape[1], **kw,
     )
     return y.reshape(*lead, y.shape[-1])
 
@@ -264,12 +335,17 @@ class ConvPolicy:
     :func:`repro.core.transform.build_conv_pairings`).  ``fuse_pool`` makes
     the ``"pallas_paired"`` path absorb a following 2×2 max-pool into the
     kernel epilogue (the conv→pool megakernel: one HBM writeback, no
-    standalone pooling op).
+    standalone pooling op).  ``pair_block_n`` records the pairing mode the
+    artifacts should be built with (0 → structured shared-row pairing;
+    ``n >= 1`` → column-blocked pairing with that block size, ``1`` being
+    the paper's per-column pairing) — :func:`conv_pairings_from_knobs`
+    builds artifacts honouring it, via :func:`paired_mode_of`.
     """
 
     impl: str = "xla"
     paired: object = None  # {layer_name: PairedLayer} for "pallas_paired"
     fuse_pool: bool = False
+    pair_block_n: int = 0
     block_m: int = 0
     block_n: int = 0
     block_k: int = 0
@@ -285,6 +361,7 @@ def pallas_conv(
     impl: str = "pallas_paired",
     paired=None,
     fuse_pool: bool = False,
+    pair_block_n: int = 0,
     block_m: int = 0,
     block_n: int = 0,
     block_k: int = 0,
@@ -297,7 +374,8 @@ def pallas_conv(
     """
     prev = current_conv_policy()
     _policy_state.conv = ConvPolicy(
-        impl, paired, fuse_pool, block_m, block_n, block_k, interpret
+        impl, paired, fuse_pool, pair_block_n,
+        block_m, block_n, block_k, interpret
     )
     try:
         yield
@@ -305,13 +383,43 @@ def pallas_conv(
         _policy_state.conv = prev
 
 
+def paired_mode_of(knobs_or_policy) -> tuple[str, int]:
+    """(pairing mode, block_n) a ``pair_block_n`` knob encodes.
+
+    ``0`` → ``("structured", 0)`` — today's shared-row pairing.  ``n >= 1``
+    → ``("column_blocked", n)``: per-block shared-row pairing, ``n == 1``
+    being the paper's per-column pairing.  Feed the result straight into
+    ``build_conv_pairings(mode=…, block_n=…)`` / ``pair_model_params``.
+    """
+    n = int(getattr(knobs_or_policy, "pair_block_n", 0) or 0)
+    return ("column_blocked", n) if n >= 1 else ("structured", 0)
+
+
+def conv_pairings_from_knobs(params, rounding: float, knobs, *, positions=None):
+    """Per-layer conv pairing artifacts honouring ``knobs.pair_block_n``.
+
+    The offline half of the ``pair_block_n`` knob: build the
+    ``build_conv_pairings`` artifacts in the mode the knob encodes
+    (structured at 0, column-blocked at ``n >= 1``), ready to hand to
+    ``conv_context(knobs, paired=…)`` / ``pallas_conv(paired=…)``.  Runs on
+    concrete weights (numpy), like all pairing preprocessing.
+    """
+    from repro.core.transform import build_conv_pairings
+
+    mode, block_n = paired_mode_of(knobs)
+    return build_conv_pairings(
+        params, rounding, positions=positions, mode=mode, block_n=block_n
+    )
+
+
 def conv_context(knobs, paired=None):
     """ConvPolicy context from a PerfKnobs-like object (``conv``/``block_*``).
 
     ``knobs.conv`` other than ``"xla"`` activates :func:`pallas_conv` with
     that implementation; ``paired`` supplies the per-layer artifacts the
-    ``"pallas_paired"`` choice consumes, and ``knobs.fuse_pool`` turns on
-    the conv→pool megakernel epilogue.
+    ``"pallas_paired"`` choice consumes, ``knobs.fuse_pool`` turns on the
+    conv→pool megakernel epilogue, and ``knobs.pair_block_n`` records the
+    pairing mode the artifacts were (or should be) built with.
     """
     impl = getattr(knobs, "conv", "xla")
     if impl != "xla":
@@ -319,6 +427,7 @@ def conv_context(knobs, paired=None):
             impl,
             paired=paired,
             fuse_pool=getattr(knobs, "fuse_pool", False),
+            pair_block_n=getattr(knobs, "pair_block_n", 0),
             block_m=getattr(knobs, "block_m", 0),
             block_n=getattr(knobs, "block_n", 0),
             block_k=getattr(knobs, "block_k", 0),

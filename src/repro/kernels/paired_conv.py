@@ -29,6 +29,16 @@ from the live weights inside the traced function —
 ``jax.grad`` (weights stay differentiable; only the pairing structure is
 frozen, exactly like the paper's one-time preprocessing).
 
+Artifacts may carry either pairing mode: a ``StructuredPairing`` (one lane
+permutation shared by all output channels) routes to ``ops.paired_matmul``;
+a ``BlockedPairing`` (one pairing per group of ``block_n`` output channels —
+down to the paper's per-column pairing at ``block_n = 1``) routes to the
+column-blocked kernel: the patch lanes are gathered once through the packed
+``(n_blocks, K')`` index matrix and the per-block weight segments are
+recomputed live under the same frozen structure
+(``_blocked_live_segments``).  Epilogue, pooling megakernel, and the
+custom-VJP split are identical on both routes.
+
 Differentiation: ``paired_conv`` is a ``jax.custom_vjp`` — forward through
 the Pallas kernel, backward as the VJP of the *folded dense equivalent*
 (im2col einsum against W_approx, plus the same window reduction), which XLA
@@ -41,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pairing import StructuredPairing
+from repro.core.pairing import BlockedPairing, StructuredPairing
 from repro.kernels import ops
 from repro.kernels.im2col import Padding, Stride, im2col
 from repro.kernels.paired_matmul import ACTIVATIONS, POOL_WINDOW, POOLS
@@ -107,8 +117,9 @@ def conv_im2col(
     return pool2_reference(y, pool)
 
 
-def _pairing_of(artifact) -> StructuredPairing:
-    """Accept a StructuredPairing or anything carrying one (PairedLayer)."""
+def _pairing_of(artifact) -> StructuredPairing | BlockedPairing:
+    """Accept a (Structured|Blocked)Pairing or anything carrying one
+    (PairedLayer)."""
     return artifact.pairing if hasattr(artifact, "pairing") else artifact
 
 
@@ -119,17 +130,62 @@ def _live_segments(wm: jax.Array, sp: StructuredPairing):
     return kmat, w_res
 
 
+def _block_major_weights(wm: jax.Array, bp: BlockedPairing) -> jax.Array:
+    """(K, N) live weights → block-major (n_blocks, K, bn), zero-padded cols."""
+    K, N = bp.shape
+    bn = bp.block_n
+    pad = bp.n_blocks * bn - N
+    wm_p = jnp.pad(wm, ((0, 0), (0, pad))) if pad else wm
+    return wm_p.reshape(K, bp.n_blocks, bn).transpose(1, 0, 2)
+
+
+def _blocked_live_segments(wm: jax.Array, bp: BlockedPairing, idx: dict):
+    """Packed per-block Kmat / W_res recomputed from live weights.
+
+    The blocked analogue of :func:`_live_segments`: ``idx`` is the (static,
+    numpy) metadata from ``BlockedPairing.index_arrays()``; the gathers are
+    ``take_along_axis`` over the block-major weight view, and the pad masks
+    zero the padded lanes so they contract against nothing.  Fully traced —
+    differentiable and valid after weight updates, like the structured path.
+    """
+    wm_t = _block_major_weights(wm, bp)  # (B, K, bn)
+    take = lambda ind: jnp.take_along_axis(wm_t, ind[:, :, None], axis=1)
+    I_m, J_m = jnp.asarray(idx["I"]), jnp.asarray(idx["J"])
+    R_m = jnp.asarray(idx["resid"])
+    pmask = jnp.asarray(idx["pair_mask"], wm.dtype)[:, :, None]
+    rmask = jnp.asarray(idx["resid_mask"], wm.dtype)[:, :, None]
+    kmat = (take(I_m) - take(J_m)) * 0.5 * pmask  # (B, Pmax, bn)
+    w_res = take(R_m) * rmask  # (B, Rmax, bn)
+    return kmat, w_res
+
+
 def folded_conv_weight(w: jax.Array, pairing) -> jax.Array:
     """Dense W_approx (kh, kw, cin, cout) the paired kernel is equivalent to.
 
-    The live-weight analogue of ``StructuredPairing.fold()``: paired rows
-    snap to ±Kmat, residual rows pass through.  Feeding this to a plain conv
+    The live-weight analogue of ``StructuredPairing.fold()`` /
+    ``BlockedPairing.fold()``: paired rows snap to ±Kmat, residual rows pass
+    through (per block, for a BlockedPairing).  Feeding this to a plain conv
     reproduces the subtractor dataflow bit-for-bit (the test oracle, and the
     backward-pass function).
     """
     sp = _pairing_of(pairing)
     kh, kw, cin, cout = w.shape
     wm = w.reshape(kh * kw * cin, cout)
+    if isinstance(sp, BlockedPairing):
+        idx = sp.index_arrays()
+        kmat, w_res = _blocked_live_segments(wm, sp, idx)
+        B, K = sp.n_blocks, sp.shape[0]
+        bar = jnp.arange(B)[:, None]
+        # scatter-add: padded entries all point at row 0 but add exact zeros
+        # (the masks in the packed segments), so they never clobber real rows
+        wf_t = (
+            jnp.zeros((B, K, sp.block_n), wm.dtype)
+            .at[bar, jnp.asarray(idx["I"])].add(kmat)
+            .at[bar, jnp.asarray(idx["J"])].add(-kmat)
+            .at[bar, jnp.asarray(idx["resid"])].add(w_res)
+        )
+        wf = wf_t.transpose(1, 0, 2).reshape(K, B * sp.block_n)[:, :cout]
+        return wf.reshape(w.shape)
     kmat, w_res = _live_segments(wm, sp)
     wf = (
         jnp.zeros_like(wm)
@@ -175,12 +231,14 @@ def paired_conv(
 ) -> jax.Array:
     """Conv through the paired Pallas kernel. x: (N, H, W, cin) → (N, OH, OW, cout).
 
-    ``pairing`` is the offline artifact (StructuredPairing or PairedLayer)
-    for ``w.reshape(K, cout)``; ``block_* = 0`` defers to the tile cache /
-    tuning heuristic.  ``stride``/``padding`` follow
-    :func:`repro.kernels.im2col.im2col`.  ``pool="max2"``/``"avg2"`` fuses
-    the 2×2 window reduction into the kernel epilogue (one HBM writeback for
-    conv→pool; output is the pooled (N, ⌊OH/2⌋, ⌊OW/2⌋, cout) map).
+    ``pairing`` is the offline artifact (StructuredPairing, BlockedPairing,
+    or a PairedLayer carrying either) for ``w.reshape(K, cout)``;
+    ``block_* = 0`` defers to the tile cache / tuning heuristic.
+    ``stride``/``padding`` follow :func:`repro.kernels.im2col.im2col`.
+    ``pool="max2"``/``"avg2"`` fuses the 2×2 window reduction into the
+    kernel epilogue (one HBM writeback for conv→pool; output is the pooled
+    (N, ⌊OH/2⌋, ⌊OW/2⌋, cout) map).  A BlockedPairing routes to the
+    column-blocked kernel — per-block lane metadata, same epilogues.
     Differentiable: Pallas forward, folded-XLA backward.
     """
     sp = _pairing_of(pairing)
@@ -190,24 +248,48 @@ def paired_conv(
         f"pairing built for {sp.shape}, conv kernel flattens to {(K, cout)}"
     )
     assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
-    perm = np.asarray(sp.perm())
+    blocked = isinstance(sp, BlockedPairing)
+    idx = sp.index_arrays() if blocked else None
+    # static gather indices: [I | J | residual] lanes — one row per block in
+    # the blocked layout, a single permutation otherwise
+    perm = np.asarray(idx["perm"] if blocked else sp.perm())
 
     def fwd_kernel(x, w, bias):
         patches = im2col(x, kh, kw, stride=stride, padding=padding)
-        xp = patches[..., perm]  # static gather → [I | J | residual] lanes
         wm = w.reshape(K, cout)
-        kmat, w_res = _live_segments(wm, sp)
+        if blocked:
+            kmat, w_res = _blocked_live_segments(wm, sp, idx)
+        else:
+            kmat, w_res = _live_segments(wm, sp)
+        kmat, w_res = kmat.astype(x.dtype), w_res.astype(x.dtype)
         if pool != "none":
-            xw, (n, poh, pow_) = _window_major(xp)
-            y = ops.paired_matmul(
-                xw, kmat.astype(x.dtype), w_res.astype(x.dtype), bias,
-                activation=activation, pool=pool,
-                block_m=block_m, block_n=block_n, block_k=block_k,
-                interpret=interpret,
-            )
+            xw, (n, poh, pow_) = _window_major(patches)
+            if blocked:
+                xg = jnp.moveaxis(xw[..., perm], 2, 0)  # (B, 4, M, K')
+                y = ops.paired_matmul_blocked(
+                    xg, kmat, w_res, bias, n_cols=cout,
+                    activation=activation, pool=pool,
+                    block_m=block_m, block_k=block_k, interpret=interpret,
+                )
+            else:
+                y = ops.paired_matmul(
+                    xw[..., perm], kmat, w_res, bias,
+                    activation=activation, pool=pool,
+                    block_m=block_m, block_n=block_n, block_k=block_k,
+                    interpret=interpret,
+                )
             return y.reshape(n, poh, pow_, cout)
+        if blocked:
+            xp = patches.reshape(-1, K)
+            xg = jnp.moveaxis(xp[:, perm], 1, 0)  # (B, M, K')
+            y = ops.paired_matmul_blocked(
+                xg, kmat, w_res, bias, n_cols=cout,
+                activation=activation,
+                block_m=block_m, block_k=block_k, interpret=interpret,
+            )
+            return y.reshape(*patches.shape[:-1], cout)
         return ops.paired_matmul(
-            xp, kmat.astype(x.dtype), w_res.astype(x.dtype), bias,
+            patches[..., perm], kmat, w_res, bias,
             activation=activation,
             block_m=block_m, block_n=block_n, block_k=block_k,
             interpret=interpret,

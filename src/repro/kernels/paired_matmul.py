@@ -60,6 +60,38 @@ window, reduces over the window axis, and flushes only the ``(bm, bn)``
 *pooled* tile.  The HBM writeback shrinks 4×, and the separate pooling op
 disappears from the schedule.
 
+Column-blocked layout (per-n-block pairings)
+============================================
+The paper's per-column pairing gives every output channel its own lane
+permutation; the structured layout above shares one across all N.  The
+*column-blocked* mode interpolates: ``core.pairing.pair_rows_blocked``
+computes an independent shared-row pairing per group of ``block_n`` output
+channels, and :func:`paired_matmul_blocked_pallas` executes it by giving
+**each grid n-step its own segment metadata**.  Operands arrive block-major:
+
+* activations are pre-gathered through the packed ``(n_blocks, K')`` index
+  matrix (``BlockedPairing.index_arrays()["perm"]``, one XLA gather) into
+  ``(n_blocks, M, K')`` — block ``b``'s rows permuted to *its* ``[I | J |
+  resid]`` order, every block padded to the common ``(Pmax, Rmax)`` split
+  (``K' = 2·Pmax + Rmax``);
+* weights are packed ``(n_blocks, Pmax, bn)`` / ``(n_blocks, Rmax, bn)``
+  with zero rows on the padding, so padded lanes contract against zeros and
+  need no masking — exactly the zero-lane trick the k-tile padding already
+  uses;
+* the grid becomes ``(M/bm, n_blocks, nk)`` and every operand spec carries a
+  leading block axis indexed by the n-step, so the k-segmentation, fp32
+  accumulator, fused epilogue and pooling epilogue all run unchanged *per
+  block* — the kernel body only swaps its tile accessors.
+
+The gather must happen outside the kernel: a k-tiled stream can only DMA
+contiguous lane blocks, and a block's paired lanes are scattered across the
+full K — pre-gathering (which XLA fuses with the im2col patch extraction)
+is what keeps the contraction K-tiled.  The cost is the activation
+replication factor ``n_blocks`` (the paper's per-column dataflow at
+``block_n = 1`` fundamentally reads each input once per output channel's
+subtract schedule); ``block_n`` is the knob trading that bandwidth against
+pairing rate.
+
 ``interpret=True`` executes the same kernel body with jnp semantics on CPU —
 that is how the kernel is validated in this container (TPU is the target).
 """
@@ -125,6 +157,7 @@ def _build_paired_call(
     Np: int,
     out_dtype,
     interpret: bool,
+    n_blocks: int = 0,
 ):
     """One parameterized ``pallas_call`` covering all segment combinations.
 
@@ -137,13 +170,22 @@ def _build_paired_call(
     are window-major ``(4, Mp, K)``, the accumulator grows a leading window
     axis, and the flush reduces the 2×2 window before the (single, pooled)
     HBM writeback.  ``Mp`` then counts *pooled* output rows.
+
+    ``n_blocks > 0`` selects the column-blocked layout (module docstring,
+    "Column-blocked layout"): every activation/weight operand carries a
+    leading block axis indexed by the grid n-step (block shape 1), so each
+    n-step contracts against its own ``[I | J | resid]`` segment metadata;
+    the grid n extent is ``n_blocks`` and ``Np == n_blocks · bn``.
     """
     has_pairs = nkp > 0
     has_resid = nkr > 0
     has_pool = pool != "none"
+    blocked = n_blocks > 0
     W = POOL_WINDOW if has_pool else 1
     nk = nkp + nkr
     assert nk > 0
+    if blocked:
+        assert Np == n_blocks * bn, (Np, n_blocks, bn)
 
     # The TPU MXU multiplies bf16 operands at full product precision and
     # accumulates fp32; XLA's *CPU* dot instead rounds each product to bf16.
@@ -176,9 +218,16 @@ def _build_paired_call(
         # Window-element accessors: with pooling the activation refs carry a
         # leading window axis and the accumulator matches; each window
         # element runs its own 2-D MXU dot (the window axis stays a leading,
-        # untiled dim — no sublane reshapes).
+        # untiled dim — no sublane reshapes).  In the blocked layout every
+        # operand additionally carries a leading (size-1) block axis — the
+        # n-step already selected the block, so the accessors just squeeze.
         def x_at(ref, w):
+            if blocked:
+                return ref[0, w] if has_pool else ref[0]
             return ref[w] if has_pool else ref[...]
+
+        def w_tile(ref):
+            return ref[0] if blocked else ref[...]
 
         def acc_add(w, val):
             if has_pool:
@@ -196,7 +245,7 @@ def _build_paired_call(
             def paired_step():
                 # VPU subtract (the paper's subtractor) at input precision,
                 # then one MXU dot per window element.
-                km = cast(km_ref[...])
+                km = cast(w_tile(km_ref))
                 for w in range(W):
                     diff = sub(x_at(xi_ref, w), x_at(xj_ref, w))
                     acc_add(w, jnp.dot(
@@ -211,7 +260,7 @@ def _build_paired_call(
             xr_ref, wr_ref = next(it), next(it)
 
             def resid_step():
-                wr = cast(wr_ref[...])
+                wr = cast(w_tile(wr_ref))
                 for w in range(W):
                     acc_add(w, jnp.dot(
                         cast(x_at(xr_ref, w)), wr,
@@ -232,28 +281,32 @@ def _build_paired_call(
             o_ref[...] = acc.astype(o_ref.dtype)
 
     # --- block specs: each segment's index map clamps into its own range ---
-    # (with pooling, activation blocks carry the full window axis up front)
-    def x_spec(bk, kmap):
+    # (with pooling, activation blocks carry the full window axis up front;
+    # in the blocked layout every operand leads with a block axis the grid
+    # n-step indexes)
+    def x_spec(bk, kidx):
+        if blocked:
+            if has_pool:
+                return pl.BlockSpec(
+                    (1, W, bm, bk), lambda m, n, k: (n, 0, m, kidx(k))
+                )
+            return pl.BlockSpec((1, bm, bk), lambda m, n, k: (n, m, kidx(k)))
         if has_pool:
-            return pl.BlockSpec((W, bm, bk), lambda m, n, k: (0, *kmap(m, n, k)))
-        return pl.BlockSpec((bm, bk), kmap)
+            return pl.BlockSpec((W, bm, bk), lambda m, n, k: (0, m, kidx(k)))
+        return pl.BlockSpec((bm, bk), lambda m, n, k: (m, kidx(k)))
+
+    def w_spec(bk, kidx):
+        if blocked:
+            return pl.BlockSpec((1, bk, bn), lambda m, n, k: (n, kidx(k), 0))
+        return pl.BlockSpec((bk, bn), lambda m, n, k: (kidx(k), n))
 
     in_specs = []
     if has_pairs:
-        pk = lambda m, n, k: (m, jnp.minimum(k, nkp - 1))
-        pw = lambda m, n, k: (jnp.minimum(k, nkp - 1), n)
-        in_specs += [
-            x_spec(bkp, pk),
-            x_spec(bkp, pk),
-            pl.BlockSpec((bkp, bn), pw),
-        ]
+        pk = lambda k: jnp.minimum(k, nkp - 1)
+        in_specs += [x_spec(bkp, pk), x_spec(bkp, pk), w_spec(bkp, pk)]
     if has_resid:
-        rk = lambda m, n, k: (m, jnp.clip(k - nkp, 0, nkr - 1))
-        rw = lambda m, n, k: (jnp.clip(k - nkp, 0, nkr - 1), n)
-        in_specs += [
-            x_spec(bkr, rk),
-            pl.BlockSpec((bkr, bn), rw),
-        ]
+        rk = lambda k: jnp.clip(k - nkp, 0, nkr - 1)
+        in_specs += [x_spec(bkr, rk), w_spec(bkr, rk)]
     if has_bias:
         in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
 
@@ -270,7 +323,7 @@ def _build_paired_call(
     acc_shape = (W, bm, bn) if has_pool else (bm, bn)
     return pl.pallas_call(
         kernel,
-        grid=(Mp // bm, Np // bn, nk),
+        grid=(Mp // bm, n_blocks if blocked else Np // bn, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
@@ -368,6 +421,100 @@ def paired_matmul_pallas(
     )
     out = call(*operands)
     return out[:M, :N]
+
+
+def paired_matmul_blocked_pallas(
+    x: jax.Array,  # (B, M, K') block-gathered, or (B, 4, M, K') window-major
+    kmat: jax.Array,  # (B, Pmax, bn) packed per-block pair magnitudes
+    w_res: jax.Array,  # (B, Rmax, bn) packed per-block residual weights
+    bias: jax.Array | None = None,  # (N,) fused epilogue bias
+    *,
+    n_cols: int,
+    block_m: int = 128,
+    block_k: int = 512,
+    activation: str = "none",
+    pool: str = "none",
+    interpret: bool = True,
+) -> jax.Array:
+    """Column-blocked K-tiled paired GEMM. Returns (M, n_cols).
+
+    Each of the ``B`` blocks owns ``bn`` contiguous output columns and its
+    own ``[I | J | resid]`` lane segments, padded to the common
+    ``(Pmax, Rmax)`` split (``K' = 2·Pmax + Rmax``; padded lanes carry zero
+    weights).  ``x`` is the activation matrix already gathered through the
+    packed index matrix (``BlockedPairing.index_arrays()["perm"]``), so row
+    block ``b`` of ``x`` is permuted to block ``b``'s lane order.  Only the
+    last block may cover fewer than ``bn`` real columns (``n_cols`` trims
+    the padding); the lane tile is pinned to ``bn`` — the pairing block size
+    *is* the kernel's n-tile.  Epilogue (bias + activation) and the fused
+    2×2 pooling (``x`` then ``(B, 4, M, K')`` window-major) behave exactly
+    as in :func:`paired_matmul_pallas`, per block.
+    """
+    assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
+    has_pool = pool != "none"
+    if has_pool:
+        assert x.ndim == 4 and x.shape[1] == POOL_WINDOW, (
+            f"pool={pool!r} expects block-major window-major x (B, 4, M, K'), "
+            f"got {x.shape}"
+        )
+    else:
+        assert x.ndim == 3, f"expected (B, M, K') activations, got {x.shape}"
+    B, P, bn = kmat.shape
+    R = w_res.shape[1]
+    assert w_res.shape[0] == B and w_res.shape[2] == bn, (kmat.shape, w_res.shape)
+    M, Kp = x.shape[-2], x.shape[-1]
+    assert x.shape[0] == B, (x.shape, B)
+    assert Kp == 2 * P + R, f"packed layout mismatch: K'={Kp} vs 2P+R={2*P+R}"
+    assert 0 < n_cols <= B * bn, (n_cols, B, bn)
+    assert activation in ACTIVATIONS, f"unknown activation {activation!r}"
+
+    xi = x[..., :P]
+    xj = x[..., P : 2 * P]
+    xr = x[..., 2 * P :]
+
+    if P + R == 0:
+        y = jnp.zeros(((POOL_WINDOW, M, n_cols) if has_pool else (M, n_cols)),
+                      jnp.float32)
+        b = None if bias is None else bias.astype(jnp.float32)[None]
+        y = _apply_epilogue(y, b, activation)
+        if has_pool:
+            y = POOLS[pool](y)
+        return y.astype(x.dtype)
+
+    m_axis, k_axis = x.ndim - 2, x.ndim - 1
+    bm = min(block_m, M)
+    Mp = _ceil_to(M, bm)
+    Np = B * bn
+
+    bkp = min(block_k, P) if P else 0
+    bkr = min(block_k, R) if R else 0
+    nkp = -(-P // bkp) if P else 0
+    nkr = -(-R // bkr) if R else 0
+
+    operands = []
+    if P:
+        Pp = nkp * bkp
+        operands += [
+            _pad_to(_pad_to(xi, m_axis, Mp), k_axis, Pp),
+            _pad_to(_pad_to(xj, m_axis, Mp), k_axis, Pp),
+            _pad_to(kmat, 1, Pp),
+        ]
+    if R:
+        Rp = nkr * bkr
+        operands += [
+            _pad_to(_pad_to(xr, m_axis, Mp), k_axis, Rp),
+            _pad_to(w_res, 1, Rp),
+        ]
+    if bias is not None:
+        operands.append(_pad_to(bias[None], 1, Np))
+
+    call = _build_paired_call(
+        bm=bm, bn=bn, nkp=nkp, bkp=bkp, nkr=nkr, bkr=bkr,
+        has_bias=bias is not None, activation=activation, pool=pool,
+        Mp=Mp, Np=Np, out_dtype=x.dtype, interpret=interpret, n_blocks=B,
+    )
+    out = call(*operands)
+    return out[:M, :n_cols]
 
 
 def dense_matmul_pallas(

@@ -109,16 +109,21 @@ def cache_key(
     dtype: str = "",
     dtype_bytes: int = 2,
     pool: str = "none",
+    blocks: int = 1,
 ) -> str:
     """Stable key for one kernel problem: (M, N, K, dtype, segments, pool).
 
     ``segments`` is the (P, R) split of the contraction — the same K tiles
     differently depending on how many lanes pair off, so it is part of the
-    problem identity, not just K.
+    problem identity, not just K.  ``blocks > 1`` marks the column-blocked
+    layout (per-n-block segment metadata; N/P/R are then the *per-block*
+    lane counts) — the suffix is only appended for blocked problems so
+    existing persisted caches keep their keys.
     """
     K = 2 * P + R
     dt = dtype or f"b{dtype_bytes}"
-    return f"M{M}-N{N}-K{K}-{dt}-p{P}r{R}-{pool}"
+    suffix = f"-x{blocks}" if blocks > 1 else ""
+    return f"M{M}-N{N}-K{K}-{dt}-p{P}r{R}-{pool}{suffix}"
 
 
 class TileCache:
@@ -228,20 +233,24 @@ def choose_blocks(
     dtype: str = "",
     pool: str = "none",
     use_cache: bool = True,
+    blocks: int = 1,
 ) -> TileConfig:
     """Pick (block_m, block_n, block_k) for a paired GEMM of the given shape.
 
     ``P`` paired lanes + ``R`` residual lanes (pass ``P=0`` for a plain
     dense GEMM of contraction length ``R``); ``pool`` budgets the fused 2×2
-    pooling epilogue's window-major streams.  A warm :class:`TileCache`
-    entry (installed via :class:`use_tile_cache`) is returned in preference
-    to the heuristic.
+    pooling epilogue's window-major streams.  For the column-blocked layout
+    pass ``blocks=n_blocks`` with the *per-block* (N, P, R) — the lane tile
+    is pinned to N there, so only block_m/block_k are really free.  A warm
+    :class:`TileCache` entry (installed via :class:`use_tile_cache`) is
+    returned in preference to the heuristic.
     """
     if use_cache:
         cache = active_tile_cache()
         if cache is not None:
             hit = cache.get(cache_key(
-                M, N, P, R, dtype=dtype, dtype_bytes=dtype_bytes, pool=pool
+                M, N, P, R, dtype=dtype, dtype_bytes=dtype_bytes, pool=pool,
+                blocks=blocks,
             ))
             if hit is not None:
                 return hit
@@ -299,12 +308,14 @@ def resolve_blocks(
     dtype_bytes: int = 2,
     dtype: str = "",
     pool: str = "none",
+    blocks: int = 1,
 ) -> TileConfig:
     """Fill any zero block size from the cache/heuristic (explicit wins)."""
     if block_m and block_n and block_k:
         return TileConfig(block_m, block_n, block_k)
     auto = choose_blocks(
-        M, N, P, R, dtype_bytes=dtype_bytes, dtype=dtype, pool=pool
+        M, N, P, R, dtype_bytes=dtype_bytes, dtype=dtype, pool=pool,
+        blocks=blocks,
     )
     return TileConfig(
         block_m or auto.block_m,

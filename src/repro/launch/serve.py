@@ -32,6 +32,12 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--paired-rounding", type=float, default=0.0)
+    ap.add_argument("--pair-block-n", type=int, default=0,
+                    help="pairing-mode spectrum: 0 → the paper's per-column "
+                         "pairing for weight folding (and structured pairing "
+                         "for kernel artifacts); n >= 1 → column-blocked "
+                         "pairing with one shared-row pairing per n output "
+                         "channels (kernel-executable; 1 == per-column)")
     ap.add_argument("--gemm", choices=("xla", "pallas"), default="xla",
                     help="route layer GEMMs through the fused K-tiled "
                          "Pallas kernel (interpret mode off-TPU)")
@@ -54,15 +60,22 @@ def main() -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
     if args.paired_rounding > 0:
-        params, report = pair_model_params(params, args.paired_rounding, min_dim=4)
+        mode = "column_blocked" if args.pair_block_n >= 1 else "per_column"
+        params, report = pair_model_params(
+            params, args.paired_rounding, min_dim=4,
+            mode=mode, block_n=args.pair_block_n,
+        )
         s = report.savings()
-        print(f"[serve] subtractor pairing: {report.total_pairs} pairs "
+        print(f"[serve] subtractor pairing ({mode}"
+              f"{f', block_n={args.pair_block_n}' if args.pair_block_n else ''}): "
+              f"{report.total_pairs} pairs "
               f"({100*report.pair_fraction:.1f}% of weights) → modeled "
               f"power −{100*s['power_saving']:.1f}%, area −{100*s['area_saving']:.1f}%")
 
     knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none",
                         gemm=args.gemm, conv=args.conv, block_k=args.block_k,
-                        fuse_pool=args.fuse_pool, tile_cache=args.tile_cache)
+                        fuse_pool=args.fuse_pool, tile_cache=args.tile_cache,
+                        pair_block_n=args.pair_block_n)
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, batch_size=args.batch, knobs=knobs)
     rng = np.random.default_rng(0)
     prompts = {

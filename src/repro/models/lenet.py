@@ -108,7 +108,11 @@ def lenet_apply(
     ``conv_impl`` selects the conv lowering: ``"xla"`` (lax.conv, default),
     ``"im2col"`` (patch GEMM via XLA), or ``"pallas_paired"`` (patch GEMM
     through the fused subtractor kernel; needs ``paired`` —
-    per-layer artifacts from ``repro.core.transform.build_conv_pairings``).
+    per-layer artifacts from ``repro.core.transform.build_conv_pairings``,
+    built with either pairing mode: structured shared-row artifacts route to
+    the shared-permutation kernel, column-blocked artifacts
+    (``mode="column_blocked"``, down to the paper's per-column pairing at
+    ``block_n=1``) route to the per-n-block kernel layout).
     ``fuse_pool`` (pallas_paired only) absorbs the 2×2 max-pool after
     conv1/conv2 into the kernel epilogue — the separate ``_maxpool2`` ops
     disappear and each conv layer makes exactly one (pooled) HBM writeback.

@@ -54,6 +54,12 @@ class PerfKnobs:
     fuse_pool: bool = False  # conv→pool megakernel: absorb the 2×2 max-pool
     # into the paired-conv epilogue (pallas_paired only; one HBM writeback
     # per conv layer, no standalone pooling op in the schedule)
+    pair_block_n: int = 0  # pairing-mode spectrum for the subtractor paths:
+    # 0 → structured (one shared-row pairing across all output channels);
+    # n >= 1 → column-blocked (one pairing per n output channels, executed
+    # by the blocked kernel; 1 == the paper's per-column pairing).  Smaller
+    # blocks pair more lanes at equal rounding, at n_blocks× activation
+    # bandwidth — see core.pairing.pair_rows_blocked.
     block_m: int = 0  # Pallas GEMM tile sizes; 0 → kernels.tuning heuristic
     block_n: int = 0
     block_k: int = 0

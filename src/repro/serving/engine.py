@@ -42,10 +42,11 @@ class ServeEngine:
         # knobs.gemm == "pallas" routes every layers.dense GEMM in the traced
         # step through the fused K-tiled kernel, knobs.conv selects the conv
         # lowering for conv-bearing models (knobs.fuse_pool additionally
-        # fuses 2×2 pooling into the conv epilogue), and knobs.tile_cache
-        # points tile selection at persisted measured winners (the policies
-        # are consulted at trace time, so they must wrap the function body,
-        # not the jit call).
+        # fuses 2×2 pooling into the conv epilogue, knobs.pair_block_n the
+        # pairing-mode spectrum point the conv artifacts use), and
+        # knobs.tile_cache points tile selection at persisted measured
+        # winners (the policies are consulted at trace time, so they must
+        # wrap the function body, not the jit call).
         def decode_fn(p, c, t, pos):
             with perf_context(self.knobs):
                 return M.decode_step(self.cfg, p, c, t, pos)

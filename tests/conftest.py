@@ -5,11 +5,28 @@ insert it on ``sys.path`` before test collection imports ``repro``.  Also
 puts ``tests/`` itself on the path so the vendored ``_proptest`` helper
 imports from any working directory, and the repo root so tests can share
 the ``benchmarks`` helpers (e.g. the jaxpr audit in ``benchmarks.common``).
+
+Shared fixtures: ``trained_lenet`` loads/trains the cached LeNet exactly
+once per pytest session (it is consumed by the Table-I ledger and kernel
+parity tests across several modules — without the session scope each module
+would redo the load + full-test-set accuracy pass).
 """
 import sys
 from pathlib import Path
+
+import pytest
 
 _ROOT = Path(__file__).resolve().parent.parent
 for p in (str(_ROOT / "src"), str(_ROOT / "tests"), str(_ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+@pytest.fixture(scope="session")
+def trained_lenet():
+    """(params, test_x32, test_y, info) — trained once, shared by the whole
+    session (backed by the on-disk ``.cache`` so repeat sessions skip
+    training entirely)."""
+    from repro.train.lenet_trainer import get_trained_lenet
+
+    return get_trained_lenet(verbose=False)

@@ -271,6 +271,99 @@ def test_lenet_fused_pool_grad():
         )
 
 
+# ---------------------------------------------------------------------------
+# column-blocked pairing through the fused conv→pool megakernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_n", [1, 4])
+@pytest.mark.parametrize(
+    "xshape,kshape,stride,padding",
+    LENET_POOL_CASES + STRIDED_PADDED_CASES[:1],
+)
+def test_blocked_fused_pool_matches_xla(xshape, kshape, stride, padding, block_n):
+    """r=0 fused conv+pool through the column-blocked layout == XLA conv →
+    bias → relu → reduce_window ≤ 1e-5 (per-n-block metadata must not
+    disturb the pooling epilogue)."""
+    from repro.core.pairing import pair_rows_blocked
+
+    rng = np.random.default_rng(kshape[3] + xshape[1] + block_n)
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=kshape), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(kshape[3],)), jnp.float32)
+    kh, kw, cin, cout = kshape
+    bp = pair_rows_blocked(
+        np.asarray(w, np.float64).reshape(kh * kw * cin, cout), 0.0, block_n
+    )
+    got = paired_conv(
+        x, w, b, pairing=bp, activation="relu",
+        stride=stride, padding=padding, pool="max2",
+    )
+    want = _xla_pool(
+        jax.nn.relu(_xla_conv(x, w, b, stride=stride, padding=padding)), "max2"
+    )
+    assert got.shape == want.shape
+    rel = float(
+        jnp.abs(got - want).max() / jnp.maximum(jnp.abs(want).max(), 1e-30)
+    )
+    assert rel <= 1e-5, f"block_n={block_n} {xshape}->{kshape}: rel {rel:.2e}"
+
+
+def test_blocked_lenet_fused_pool_schedule_and_grad():
+    """LeNet through column-blocked artifacts with fuse_pool: identical
+    schedule audit (0 standalone pool ops, 3 writebacks), r=0 forward
+    parity, and XLA-matching gradients under jit+grad."""
+    params = init_lenet(jax.random.key(8))
+    x = jnp.asarray(
+        np.random.default_rng(8).normal(size=(2, 32, 32, 1)), jnp.float32
+    )
+    arts = build_conv_pairings(params, 0.0, mode="column_blocked", block_n=4)
+    y_ref = lenet_apply(params, x)
+    with pallas_conv(paired=arts, fuse_pool=True):
+        y_blk = jax.jit(lambda p, xb: lenet_apply(p, xb))(params, x)
+        jaxpr = jax.make_jaxpr(lambda p, xb: lenet_apply(p, xb))(params, x)
+    rel = float(jnp.abs(y_blk - y_ref).max() / jnp.abs(y_ref).max())
+    assert rel <= 1e-5
+    assert _count_prims(jaxpr, "reduce_window_max") == 0
+    assert _count_prims(jaxpr, "pallas_call") == 3
+
+    g_ref = jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean())(params)
+    with pallas_conv(paired=arts, fuse_pool=True):
+        g = jax.jit(
+            jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean())
+        )(params)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g)):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4
+        )
+
+
+def test_blocked_fused_pool_positive_rounding_matches_oracle():
+    """At r > 0 the blocked megakernel equals its folded pooled oracle, with
+    a nontrivial per-block pairing actually engaged."""
+    from repro.core.pairing import pair_rows_blocked
+    from repro.kernels.paired_conv import paired_conv_ref
+
+    xshape, kshape = (2, 12, 12, 4), (3, 3, 4, 8)
+    rounding = 0.2
+    rng = np.random.default_rng(19)
+    kh, kw, cin, cout = kshape
+    K = kh * kw * cin
+    P = K // 4
+    half = rng.normal(size=(P, cout)) * 0.3 + 1.0
+    rest = rng.normal(size=(K - 2 * P, cout)) * 0.02
+    wm = np.concatenate([half, -half, rest]).astype(np.float32)
+    bp = pair_rows_blocked(wm.astype(np.float64), rounding, 3)
+    assert bp.n_pairs >= P  # every block recovers the planted rows
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w = jnp.asarray(wm.reshape(kshape))
+    got = paired_conv(x, w, None, pairing=bp, activation="relu", pool="max2")
+    want = paired_conv_ref(x, w, None, bp, activation="relu", pool="max2")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
 def test_lenet_fuse_pool_ignored_off_pallas_path():
     """fuse_pool is a no-op for the xla/im2col lowerings (no megakernel)."""
     params = init_lenet(jax.random.key(3))

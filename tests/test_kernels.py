@@ -241,6 +241,37 @@ def test_structured_pairing_end_to_end():
     )
 
 
+def test_blocked_pairing_end_to_end():
+    """blocked kernel through a real BlockedPairing == x @ fold(), and at
+    block_n = N it agrees with the structured kernel path."""
+    from repro.core.pairing import pair_rows_blocked
+    from repro.kernels.ops import apply_blocked_pairing
+
+    rng = np.random.default_rng(43)
+    half = rng.normal(size=(24, 20)) + 1.5
+    W = np.concatenate([half, -half + rng.normal(size=(24, 20)) * 0.05])
+    x = jnp.asarray(rng.normal(size=(3, 9, 48)), jnp.float32)  # lead dims
+    for block_n in (1, 5, 20):
+        bp = pair_rows_blocked(W, 0.5, block_n)
+        assert bp.n_pairs > 0, "want a nontrivial pairing for this test"
+        y_kernel = apply_blocked_pairing(x, bp, block_m=8, block_k=16)
+        y_dense = x @ jnp.asarray(bp.fold(), jnp.float32)
+        assert y_kernel.shape == y_dense.shape == (3, 9, 20)
+        np.testing.assert_allclose(
+            np.asarray(y_kernel), np.asarray(y_dense), rtol=1e-4, atol=1e-4
+        )
+    # the single-block case is the structured pairing, kernel included
+    bpN = pair_rows_blocked(W, 0.5, 20)
+    spN = pair_rows_structured(W, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(apply_blocked_pairing(x, bpN, block_m=8, block_k=16)),
+        np.asarray(apply_structured_pairing(
+            x, spN, block_m=8, block_n=8, block_k=16
+        )),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
 def test_contraction_savings_accounting():
     """The kernel's MXU contraction length is K - P: every pair saves a lane."""
     rng = np.random.default_rng(1)

@@ -2,12 +2,13 @@
 import numpy as np
 import pytest
 
-from _proptest import cases, floats, integers, seeds
+from _proptest import cases, floats, integers, sampled_from, seeds
 
 from repro.core.pairing import (
     pair_list_twopointer,
     pair_columns,
     fold_columns,
+    pair_rows_blocked,
     pair_rows_structured,
     pairing_op_counts,
     column_pairing_for_conv,
@@ -173,3 +174,136 @@ def test_structured_antisymmetric_pairs_everything():
     sp = pair_rows_structured(W, 1e-6)
     assert sp.n_pairs == 32
     np.testing.assert_allclose(sp.fold(), W, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# column-blocked pairing (the structured ↔ per-column spectrum)
+# ---------------------------------------------------------------------------
+
+
+def _random_matrix(rng, k, n):
+    """Weight matrix with enough opposite-sign structure to pair sometimes."""
+    W = rng.normal(size=(k, n)) * rng.uniform(0.1, 2.0)
+    return W
+
+
+@cases(
+    30, k=integers(2, 60), n=integers(1, 10), block=integers(1, 12),
+    rounding=floats(0.0, 0.5), seed=seeds(),
+)
+def test_blocked_is_a_valid_permutation_per_block(k, n, block, rounding, seed):
+    """Every block partitions the K rows exactly: each row appears exactly
+    once in its block's [I | J | resid], and blocks tile the columns."""
+    W = _random_matrix(np.random.default_rng(seed), k, n)
+    bp = pair_rows_blocked(W, rounding, block)
+    assert bp.shape == (k, n)
+    covered = 0
+    for b, sp in enumerate(bp.blocks):
+        lo, hi = bp.block_cols(b)
+        assert sp.shape == (k, hi - lo)
+        assert sorted(sp.perm().tolist()) == list(range(k))
+        covered += hi - lo
+    assert covered == n
+
+
+@cases(
+    20, k=integers(2, 50), n=integers(1, 8), block=integers(1, 10),
+    seed=seeds(),
+)
+def test_blocked_rounding_zero_reconstructs_exactly(k, n, block, seed):
+    """rounding 0 → no pairs → fold() IS W and x @ fold() == x @ W exactly."""
+    rng = np.random.default_rng(seed)
+    W = _random_matrix(rng, k, n)
+    bp = pair_rows_blocked(W, 0.0, block)
+    assert bp.n_pairs == 0 and bp.weighted_pairs == 0
+    np.testing.assert_array_equal(bp.fold(), W)
+    x = rng.normal(size=(5, k))
+    np.testing.assert_array_equal(x @ bp.fold(), x @ W)
+
+
+@cases(
+    25, k=integers(2, 50), n=integers(1, 8), block=integers(1, 10),
+    rounding=floats(1e-3, 0.5), seed=seeds(),
+    criterion=sampled_from(["rms", "max"]),
+)
+def test_blocked_symmetric_error_bound(k, n, block, rounding, seed, criterion):
+    """Folding drops only the symmetric part of each pair, bounded by the
+    criterion: per paired row, max-norm error ≤ r/2 under "max" and
+    rms error ≤ r/2 under "rms"."""
+    W = _random_matrix(np.random.default_rng(seed), k, n)
+    bp = pair_rows_blocked(W, rounding, block, criterion=criterion)
+    for b, sp in enumerate(bp.blocks):
+        lo, hi = bp.block_cols(b)
+        err = np.abs(sp.fold() - W[:, lo:hi])
+        if criterion == "max":
+            assert err.max(initial=0.0) <= rounding / 2 + 1e-12
+        else:
+            row_rms = np.sqrt((err**2).mean(axis=1))
+            assert row_rms.max(initial=0.0) <= rounding / 2 + 1e-12
+
+
+@cases(
+    25, k=integers(2, 60), n=integers(1, 8), rounding=floats(0.0, 0.5),
+    seed=seeds(),
+)
+def test_blocked_at_block_N_is_structured(k, n, rounding, seed):
+    """block_n >= N degenerates to pair_rows_structured, index for index."""
+    W = _random_matrix(np.random.default_rng(seed), k, n)
+    bp = pair_rows_blocked(W, rounding, n + int(seed) % 3)  # >= N
+    sp = pair_rows_structured(W, rounding)
+    assert bp.n_blocks == 1
+    got = bp.blocks[0]
+    np.testing.assert_array_equal(got.I, sp.I)
+    np.testing.assert_array_equal(got.J, sp.J)
+    np.testing.assert_array_equal(got.resid, sp.resid)
+    np.testing.assert_array_equal(bp.fold(), sp.fold())
+
+
+@cases(
+    25, k=integers(1, 60), n=integers(1, 8), rounding=floats(0.0, 0.5),
+    seed=seeds(),
+)
+def test_blocked_at_block_1_is_per_column(k, n, rounding, seed):
+    """block_n == 1 reproduces Algorithm 1's per-column ledger exactly:
+    same pair count per column, same folded matrix, bit for bit."""
+    W = _random_matrix(np.random.default_rng(seed), k, n)
+    bp = pair_rows_blocked(W, rounding, 1)
+    cp = pair_columns(W, rounding)
+    assert bp.n_blocks == n
+    for col, sp in enumerate(bp.blocks):
+        assert sp.n_pairs == cp.n_pairs[col], col
+        got = sorted(zip(sp.I.tolist(), sp.J.tolist()))
+        want = sorted(
+            zip(
+                cp.pair_pos[: cp.n_pairs[col], col].tolist(),
+                cp.pair_neg[: cp.n_pairs[col], col].tolist(),
+            )
+        )
+        assert got == want, col
+    assert bp.weighted_pairs == cp.total_pairs
+    np.testing.assert_array_equal(bp.fold(), fold_columns(W, cp))
+
+
+@cases(
+    20, k=integers(2, 40), n=integers(2, 8), block=integers(1, 8),
+    rounding=floats(1e-3, 0.6), seed=seeds(),
+)
+def test_blocked_packed_layout_roundtrips(k, n, block, rounding, seed):
+    """The packed kernel metadata (index_arrays + packed_weights) evaluates
+    to the same matrix product as fold(): gather x through the packed perm,
+    contract the padded segments, compare against x @ fold()."""
+    rng = np.random.default_rng(seed)
+    W = _random_matrix(rng, k, n)
+    # plant antisymmetric structure so pairs actually exist sometimes
+    if k >= 4:
+        W[1] = -W[0] + rng.normal(size=n) * rounding * 0.1
+    bp = pair_rows_blocked(W, rounding, block)
+    idx = bp.index_arrays()
+    km, wr = bp.packed_weights()
+    P, R = bp.Pmax, bp.Rmax
+    x = rng.normal(size=(6, k))
+    xg = x[:, idx["perm"]].transpose(1, 0, 2)  # (B, M, 2P+R)
+    y = np.einsum("bmp,bpn->bmn", xg[..., :P] - xg[..., P : 2 * P], km)
+    y += np.einsum("bmr,brn->bmn", xg[..., 2 * P :], wr)
+    got = y.transpose(1, 0, 2).reshape(6, -1)[:, :n]
+    np.testing.assert_allclose(got, x @ bp.fold(), rtol=1e-10, atol=1e-10)

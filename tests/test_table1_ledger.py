@@ -1,0 +1,107 @@
+"""Table-I structural invariants, promoted from the bench docstring to tier-1.
+
+``benchmarks/table1.py`` asserts these while it runs; this module pins them
+as tests on the *trained* LeNet weights (session-cached fixture) so a
+pairing-algorithm regression fails the suite, not just the bench job:
+
+* the analytic ledger satisfies ``adds == mults`` and
+  ``adds + subs == 405 600`` (the paper's conv MAC baseline) at every
+  rounding;
+* the subtraction count is monotone in the rounding size (Table I's trend);
+* the pairing-mode spectrum is ordered at every rounding —
+  ``structured ≤ column_blocked(n) ≤ … ≤ per_column`` in per-column-
+  equivalent pair counts — and the executed ``block_n=1`` ledger equals the
+  analytic per-column ledger exactly (the kernel runs Algorithm 1's
+  pairing, not an approximation of it).
+"""
+import numpy as np
+import pytest
+
+from repro.core.pairing import (
+    fold_columns,
+    pair_columns,
+    pair_rows_blocked,
+    pair_rows_structured,
+    sweep_rounding,
+)
+from repro.models.lenet import LENET_CONV_SHAPES
+
+# Small sweep: the Table-I endpoints plus the paper's headline rounding and
+# the band where the structured pairing starts to engage on trained weights.
+ROUNDINGS = [0.0, 0.0001, 0.01, 0.05, 0.1, 0.3]
+BLOCK_NS = [8, 4, 2, 1]  # structured → … → per-column order
+
+BASELINE_MACS = 405600  # 117 600 + 240 000 + 48 000 (paper Table I)
+
+
+def _conv_mats(params):
+    """[(name, (K, N) matrix, positions)] for the three conv layers."""
+    out = []
+    for name, (shape, pos) in LENET_CONV_SHAPES.items():
+        k = np.asarray(params[name]["w"], np.float64)
+        H, W, Cin, Cout = k.shape
+        out.append((name, k.reshape(H * W * Cin, Cout), pos))
+    return out
+
+
+@pytest.fixture(scope="module")
+def ledger_rows(trained_lenet):
+    params, _, _, _ = trained_lenet
+    mats = _conv_mats(params)
+    return sweep_rounding(
+        [m for _, m, _ in mats], [p for _, _, p in mats], ROUNDINGS
+    )
+
+
+def test_adds_equal_mults(ledger_rows):
+    """Pairing replaces one add + one mult together, never one alone."""
+    for row in ledger_rows:
+        assert row["adds"] == row["mults"], row
+
+
+def test_baseline_macs_conserved(ledger_rows):
+    """Every MAC is either still an add or became a sub: adds + subs is the
+    paper's 405 600 baseline at every rounding."""
+    for row in ledger_rows:
+        assert row["adds"] + row["subs"] == BASELINE_MACS, row
+
+
+def test_subs_monotone_in_rounding(ledger_rows):
+    """A larger rounding window can only pair more (Table I's trend)."""
+    subs = [row["subs"] for row in ledger_rows]
+    assert subs == sorted(subs), subs
+
+
+def test_pairing_mode_spectrum_ordered(trained_lenet):
+    """structured ≤ blocked(8) ≤ blocked(4) ≤ blocked(2) ≤ per_column in
+    per-column-equivalent pair counts, at every swept rounding."""
+    params, _, _, _ = trained_lenet
+    mats = _conv_mats(params)
+    for r in ROUNDINGS:
+        ladder = [
+            sum(pair_rows_structured(m, r).weighted_pairs for _, m, _ in mats)
+        ]
+        for bn in BLOCK_NS:
+            ladder.append(
+                sum(
+                    pair_rows_blocked(m, r, bn).weighted_pairs
+                    for _, m, _ in mats
+                )
+            )
+        ladder.append(
+            sum(pair_columns(m, r).total_pairs for _, m, _ in mats)
+        )
+        assert all(a <= b for a, b in zip(ladder, ladder[1:])), (r, ladder)
+
+
+def test_blocked_1_ledger_is_the_analytic_ledger(trained_lenet):
+    """The executed per-column pairing (block_n=1) reproduces the analytic
+    Algorithm-1 ledger exactly, layer by layer, at every swept rounding."""
+    params, _, _, _ = trained_lenet
+    for name, m, pos in _conv_mats(params):
+        for r in ROUNDINGS:
+            bp = pair_rows_blocked(m, r, 1)
+            cp = pair_columns(m, r)
+            assert bp.weighted_pairs == cp.total_pairs, (name, r)
+            # and the folded (deploy-equivalent) matrices are identical
+            np.testing.assert_array_equal(bp.fold(), fold_columns(m, cp))
