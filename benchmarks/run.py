@@ -30,6 +30,7 @@ from benchmarks.common import write_result
 BENCHES = [
     ("table1", "paper Table I", table1.run),
     ("fig8", "paper Fig. 8 + Fig. 3/4", fig8.run),
+    ("lm_paired", "beyond paper: paired LM decode", fig8.run_lm_paired),
     ("pairing_rate_lm", "beyond paper", pairing_rate_lm.run),
     ("roofline", "dry-run analysis", roofline.run),
 ]

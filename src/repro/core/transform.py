@@ -184,6 +184,188 @@ def _path_str(path: Any) -> str:
     return jax.tree_util.keystr(path)
 
 
+# ---------------------------------------------------------------------------
+# LM pairing: artifacts for the decoder stack (kernel-executable, scan-ready)
+# ---------------------------------------------------------------------------
+
+# Decoder weights the paired LM path routes through the subtractor kernel.
+# Keys are (sub-dict, weight name); "wo" contracts over all-but-last axes
+# (the attention out-projection einsum "bshk,hkd->bsd"), everything else
+# over its leading axis.  Embeddings, norms, biases and the MLA latent
+# projections are deliberately absent: norms/biases are not GEMMs, the
+# embedding/lm_head gather-shaped matmuls never go through layers.dense,
+# and MLA blocks absorb their projections into the latent-space einsums.
+LM_PAIRED_WEIGHTS: tuple[tuple[str, str], ...] = (
+    ("attn", "wq"),
+    ("attn", "wk"),
+    ("attn", "wv"),
+    ("attn", "wo"),
+    ("mlp", "w_gate"),
+    ("mlp", "w_up"),
+    ("mlp", "w_down"),
+)
+
+
+def _lm_weight_matrix_shape(name: str, shape: tuple[int, ...]) -> tuple[int, int]:
+    """(K, N) GEMM view of one *per-layer* decoder weight shape."""
+    if name == "wo":
+        K = int(np.prod(shape[:-1]))
+        return K, int(shape[-1])
+    return int(shape[0]), int(np.prod(shape[1:]))
+
+
+def _stack_structured(pairings: list[StructuredPairing]) -> dict[str, np.ndarray]:
+    """Pad per-layer structured pairings to a common (Pmax, Rmax) and stack.
+
+    Padded pair lanes point ``I == J == 0`` (their subtract is exactly
+    zero) and padded residual lanes at row 0 with a zero mask, so padding
+    contracts against nothing — the zero-lane trick the kernel's k-tile
+    padding already relies on.
+    """
+    L = len(pairings)
+    P = max((sp.n_pairs for sp in pairings), default=0)
+    R = max((len(sp.resid) for sp in pairings), default=0)
+    I_m = np.zeros((L, P), np.int32)
+    J_m = np.zeros((L, P), np.int32)
+    R_m = np.zeros((L, R), np.int32)
+    pmask = np.zeros((L, P), np.float32)
+    rmask = np.zeros((L, R), np.float32)
+    for l, sp in enumerate(pairings):
+        p, r = sp.n_pairs, len(sp.resid)
+        I_m[l, :p] = sp.I
+        J_m[l, :p] = sp.J
+        R_m[l, :r] = sp.resid
+        pmask[l, :p] = 1.0
+        rmask[l, :r] = 1.0
+    return {"I": I_m, "J": J_m, "resid": R_m,
+            "pair_mask": pmask, "resid_mask": rmask}
+
+
+def _stack_blocked(pairings: list[BlockedPairing]) -> dict[str, np.ndarray]:
+    """Pad per-layer blocked index matrices to common (Pmax, Rmax), stack."""
+    L = len(pairings)
+    B = pairings[0].n_blocks
+    P = max(bp.Pmax for bp in pairings)
+    R = max(bp.Rmax for bp in pairings)
+    I_m = np.zeros((L, B, P), np.int32)
+    J_m = np.zeros((L, B, P), np.int32)
+    R_m = np.zeros((L, B, R), np.int32)
+    pmask = np.zeros((L, B, P), np.float32)
+    rmask = np.zeros((L, B, R), np.float32)
+    for l, bp in enumerate(pairings):
+        idx = bp.index_arrays()
+        p, r = bp.Pmax, bp.Rmax
+        I_m[l, :, :p] = idx["I"]
+        J_m[l, :, :p] = idx["J"]
+        R_m[l, :, :r] = idx["resid"]
+        pmask[l, :, :p] = idx["pair_mask"]
+        rmask[l, :, :r] = idx["resid_mask"]
+    return {"I": I_m, "J": J_m, "resid": R_m,
+            "pair_mask": pmask, "resid_mask": rmask}
+
+
+def has_lm_pairing(params: Any) -> bool:
+    """True iff ``params`` already carries pair_lm_params metadata."""
+    for seg in params.get("segments", []) if isinstance(params, dict) else []:
+        for sub in seg.values():
+            if isinstance(sub, dict) and any(
+                k.endswith("_pairing") for k in sub
+            ):
+                return True
+    return False
+
+
+def pair_lm_params(
+    params: Any,
+    rounding: float,
+    *,
+    mode: str = "structured",
+    block_n: int = 0,
+    criterion: str = "rms",
+    min_dim: int = 8,
+) -> tuple[Any, PairedModelReport]:
+    """Pairing artifacts for every dense decoder weight of an LM param tree.
+
+    The LM analogue of :func:`build_conv_pairings`: walks the stacked
+    decoder segments (``params["segments"]``, the lax.scan layout) and runs
+    the paper's preprocessing per layer on each eligible weight —
+    attention qkv/out projections and the MLP up/gate/down matrices
+    (:data:`LM_PAIRED_WEIGHTS`); embeddings, norms and biases are skipped.
+    MLA attention sub-dicts are skipped whole (their projections live in
+    latent-space einsums, not ``layers.dense``).
+
+    Returns ``(params', report)`` where ``params'`` is the same tree with a
+    sibling ``"<name>_pairing"`` metadata entry next to each paired weight:
+    stacked ``(layers, …)`` index/mask arrays (per-layer pairings padded to
+    the segment-wide (Pmax, Rmax)), which a ``lax.scan`` over the segment
+    slices per layer exactly like the weights themselves.  The weights are
+    **not** folded — magnitudes are recomputed live inside the trace
+    (``kernels.ops.fused_paired_dense``), so the artifact survives
+    ``jax.grad`` and weight updates, same contract as ``paired_conv``.
+
+    ``mode`` picks the pairing-spectrum point: ``"structured"`` (one
+    shared-row pairing per layer), ``"column_blocked"`` (one per
+    ``block_n`` output columns — kernel-executable down to the paper's
+    per-column pairing), or ``"per_column"`` (sugar for ``block_n=1``).
+    """
+    if mode == "per_column":
+        mode, block_n = "column_blocked", 1
+    assert mode in ("structured", "column_blocked"), f"unknown mode {mode!r}"
+    if mode == "column_blocked" and block_n < 1:
+        raise ValueError("mode='column_blocked' needs block_n >= 1")
+
+    leaves_report: list[LeafReport] = []
+    out = dict(params)
+    new_segs = []
+    for si, seg in enumerate(params.get("segments", [])):
+        new_seg = dict(seg)
+        for sub_name, w_name in LM_PAIRED_WEIGHTS:
+            sub = new_seg.get(sub_name)
+            if not isinstance(sub, dict) or w_name not in sub:
+                continue
+            if sub_name == "attn" and "w_dkv" in sub:
+                continue  # MLA: projections don't route through layers.dense
+            arr = np.asarray(sub[w_name])
+            if arr.dtype.kind != "f" or arr.ndim < 3:
+                continue  # stacked (layers, …) float matrices only
+            L = arr.shape[0]
+            K, N = _lm_weight_matrix_shape(w_name, arr.shape[1:])
+            if K < min_dim or N < min_dim:
+                continue
+            mats = arr.reshape(L, K, N).astype(np.float64)
+            if mode == "column_blocked":
+                pairings_b = [
+                    pair_rows_blocked(mats[l], rounding, block_n,
+                                      criterion=criterion)
+                    for l in range(L)
+                ]
+                meta = _stack_blocked(pairings_b)
+                n_pairs = sum(bp.weighted_pairs for bp in pairings_b)
+            else:
+                pairings_s = [
+                    pair_rows_structured(mats[l], rounding, criterion=criterion)
+                    for l in range(L)
+                ]
+                meta = _stack_structured(pairings_s)
+                n_pairs = sum(sp.weighted_pairs for sp in pairings_s)
+            new_sub = dict(sub)
+            new_sub[w_name + "_pairing"] = meta
+            new_seg[sub_name] = new_sub
+            leaves_report.append(
+                LeafReport(
+                    path=f"segments[{si}].{sub_name}.{w_name}",
+                    shape=tuple(arr.shape),
+                    n_weights=int(mats.size),
+                    n_pairs=int(n_pairs),
+                    pair_fraction=2.0 * n_pairs / mats.size,
+                )
+            )
+        new_segs.append(new_seg)
+    out["segments"] = new_segs
+    report = PairedModelReport(rounding=rounding, mode=mode, leaves=leaves_report)
+    return out, report
+
+
 def pair_model_params(
     params: Any,
     rounding: float,

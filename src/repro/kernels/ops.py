@@ -25,6 +25,7 @@ import threading
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.pairing import BlockedPairing, StructuredPairing
 from repro.kernels import tuning
@@ -50,6 +51,7 @@ def paired_matmul(
     kmat: jax.Array,
     w_res: jax.Array,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     *,
     block_m: int = 0,
     block_n: int = 0,
@@ -62,9 +64,11 @@ def paired_matmul(
 
     ``block_* = 0`` → tiles from :mod:`repro.kernels.tuning` (a warm
     :class:`~repro.kernels.tuning.TileCache` hit wins over the heuristic).
-    ``bias``/``activation`` fuse into the kernel epilogue.  With
-    ``pool="max2"``/``"avg2"`` ``x`` must be window-major ``(4, M, K)`` and
-    the fused 2×2 reduction happens in VMEM (see paired_matmul_pallas).
+    ``bias``/``activation`` fuse into the kernel epilogue, and ``residual``
+    (an output-shaped ``(…, N)`` skip connection) fuses into the flush
+    after them.  With ``pool="max2"``/``"avg2"`` ``x`` must be window-major
+    ``(4, M, K)`` and the fused 2×2 reduction happens in VMEM (see
+    paired_matmul_pallas); ``residual`` is then the pooled ``(M, N)`` map.
     """
     interp = (not _on_tpu()) if interpret is None else interpret
     has_pool = pool != "none"
@@ -74,13 +78,17 @@ def paired_matmul(
     else:
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
+    res2 = None
+    if residual is not None:
+        res2 = residual.reshape(-1, residual.shape[-1])
     tiles = tuning.resolve_blocks(
         x2.shape[-2], kmat.shape[1], kmat.shape[0], w_res.shape[0],
         block_m=block_m, block_n=block_n, block_k=block_k,
         dtype_bytes=x.dtype.itemsize, dtype=x.dtype.name, pool=pool,
+        residual=residual is not None,
     )
     y = paired_matmul_pallas(
-        x2, kmat, w_res, bias,
+        x2, kmat, w_res, bias, residual=res2,
         block_m=tiles.block_m, block_n=tiles.block_n, block_k=tiles.block_k,
         activation=activation, pool=pool, interpret=interp,
     )
@@ -97,6 +105,7 @@ def dense_matmul(
     x: jax.Array,
     w: jax.Array,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     *,
     block_m: int = 0,
     block_n: int = 0,
@@ -108,13 +117,15 @@ def dense_matmul(
     interp = (not _on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    res2 = None if residual is None else residual.reshape(-1, residual.shape[-1])
     tiles = tuning.resolve_blocks(
         x2.shape[0], w.shape[1], 0, w.shape[0],
         block_m=block_m, block_n=block_n, block_k=block_k,
         dtype_bytes=x.dtype.itemsize, dtype=x.dtype.name,
+        residual=residual is not None,
     )
     y = dense_matmul_pallas(
-        x2, w, bias,
+        x2, w, bias, residual=res2,
         block_m=tiles.block_m, block_n=tiles.block_n, block_k=tiles.block_k,
         activation=activation, interpret=interp,
     )
@@ -132,6 +143,7 @@ def paired_matmul_blocked(
     kmat: jax.Array,
     w_res: jax.Array,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     *,
     n_cols: int,
     block_m: int = 0,
@@ -145,6 +157,7 @@ def paired_matmul_blocked(
     ``x`` is block-gathered ``(B, M, K')`` (window-major ``(B, 4, M, K')``
     with pooling), ``kmat``/``w_res`` the packed per-block weight segments —
     see :func:`repro.kernels.paired_matmul.paired_matmul_blocked_pallas`.
+    ``residual`` is an output-space ``(M, n_cols)`` fused skip connection.
     The lane tile is pinned to the pairing block size; ``block_m``/
     ``block_k = 0`` resolve through the tile cache / heuristic under a
     blocked cache key.
@@ -156,10 +169,10 @@ def paired_matmul_blocked(
         x.shape[-2], bn, P, R,
         block_m=block_m, block_n=bn, block_k=block_k,
         dtype_bytes=x.dtype.itemsize, dtype=x.dtype.name, pool=pool,
-        blocks=B,
+        blocks=B, residual=residual is not None,
     )
     return paired_matmul_blocked_pallas(
-        x, kmat, w_res, bias,
+        x, kmat, w_res, bias, residual=residual,
         n_cols=n_cols, block_m=tiles.block_m, block_k=tiles.block_k,
         activation=activation, pool=pool, interpret=interp,
     )
@@ -264,6 +277,182 @@ def fused_dense(
 
 
 # ---------------------------------------------------------------------------
+# differentiable fused *paired* dense: live-weight subtractor GEMM for the LM
+# ---------------------------------------------------------------------------
+#
+# The LM analogue of kernels.paired_conv: the pairing artifact
+# (core.transform.pair_lm_params) carries only the frozen *index structure*
+# of which contraction lanes subtract — as stacked arrays with a leading
+# layers axis, so a lax.scan over a decoder segment slices each layer's
+# metadata like any other scanned operand.  Pair magnitudes are recomputed
+# from the live weights inside the trace (Kmat = (W[I] − W[J]) / 2), so the
+# same artifact serves inference and jax.grad.  Lane lists are padded to a
+# segment-wide (Pmax, Rmax): padded pair lanes point I == J == 0 (the
+# subtract is exactly zero) and every padded weight row is masked to zero,
+# so padding contracts against nothing — the same zero-lane trick the
+# k-tile padding and the column-blocked packing already use.
+
+
+def _lm_structured_segments(w2: jax.Array, meta: dict):
+    """Live (kmat, w_res) for a structured LM pairing (traced indices)."""
+    I, J, Rm = meta["I"], meta["J"], meta["resid"]
+    kmat = (jnp.take(w2, I, axis=0) - jnp.take(w2, J, axis=0)) * 0.5
+    kmat = kmat * meta["pair_mask"][:, None].astype(w2.dtype)
+    w_res = jnp.take(w2, Rm, axis=0) * meta["resid_mask"][:, None].astype(w2.dtype)
+    return kmat, w_res
+
+
+def _lm_blocked_weights(w2: jax.Array, n_blocks: int, bn: int) -> jax.Array:
+    """(K, N) live weights → block-major (n_blocks, K, bn), zero-padded cols."""
+    K, N = w2.shape
+    pad = n_blocks * bn - N
+    w_p = jnp.pad(w2, ((0, 0), (0, pad))) if pad else w2
+    return w_p.reshape(K, n_blocks, bn).transpose(1, 0, 2)
+
+
+def _lm_blocked_segments(w2: jax.Array, meta: dict, bn: int):
+    """Packed per-block live (kmat, w_res) for a blocked LM pairing."""
+    I, J, Rm = meta["I"], meta["J"], meta["resid"]
+    wm_t = _lm_blocked_weights(w2, I.shape[0], bn)  # (B, K, bn)
+    take = lambda ind: jnp.take_along_axis(wm_t, ind[:, :, None], axis=1)
+    pmask = meta["pair_mask"][:, :, None].astype(w2.dtype)
+    rmask = meta["resid_mask"][:, :, None].astype(w2.dtype)
+    kmat = (take(I) - take(J)) * 0.5 * pmask  # (B, Pmax, bn)
+    w_res = take(Rm) * rmask  # (B, Rmax, bn)
+    return kmat, w_res
+
+
+def fold_lm_weight(w2: jax.Array, meta: dict, pair_block_n: int = 0) -> jax.Array:
+    """Dense W_approx (K, N) the paired LM GEMM is equivalent to.
+
+    The live-weight fold under a frozen pairing structure (the backward-pass
+    function and test oracle): paired rows snap to ±Kmat, residual rows pass
+    through.  Scatter-*add* because padded lanes all point at row 0 with
+    exactly-zero masked contributions.
+    """
+    if meta["I"].ndim == 2:  # blocked: (B, Pmax)-shaped lane lists
+        B = meta["I"].shape[0]
+        K, N = w2.shape
+        bn = pair_block_n
+        assert bn >= 1 and B == -(-N // bn), (B, N, bn)
+        kmat, w_res = _lm_blocked_segments(w2, meta, bn)
+        bar = jnp.arange(B)[:, None]
+        wf_t = (
+            jnp.zeros((B, K, bn), w2.dtype)
+            .at[bar, meta["I"]].add(kmat)
+            .at[bar, meta["J"]].add(-kmat)
+            .at[bar, meta["resid"]].add(w_res)
+        )
+        return wf_t.transpose(1, 0, 2).reshape(K, B * bn)[:, :N]
+    kmat, w_res = _lm_structured_segments(w2, meta)
+    return (
+        jnp.zeros_like(w2)
+        .at[meta["I"]].add(kmat)
+        .at[meta["J"]].add(-kmat)
+        .at[meta["resid"]].add(w_res)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_paired_dense_grad(
+    activation, blocked, pair_block_n, block_m, block_n, block_k, interpret
+):
+    """custom_vjp factory: forward through the paired kernel (live-weight
+    segments, fused bias/activation/residual epilogue), backward as the VJP
+    of the folded dense equivalent — the same Pallas-forward / folded-XLA-
+    backward split as paired_conv and fused_dense.  The pairing metadata is
+    a primal argument (its leaves are traced scan slices), with float0 /
+    zero cotangents: only the *structure* is frozen, weights stay live."""
+    from repro.kernels.paired_matmul import ACTIVATIONS
+
+    def primal(x, w2, b, res, meta):
+        N = w2.shape[1]
+        perm = jnp.concatenate([meta["I"], meta["J"], meta["resid"]], axis=-1)
+        if blocked:
+            x2 = x.reshape(-1, x.shape[-1])
+            xg = jnp.moveaxis(jnp.take(x2, perm, axis=-1), -2, 0)  # (B, M, K')
+            kmat, w_res = _lm_blocked_segments(w2, meta, pair_block_n)
+            res2 = None if res is None else res.reshape(-1, N)
+            y = paired_matmul_blocked(
+                xg, kmat.astype(x.dtype), w_res.astype(x.dtype), b, res2,
+                n_cols=N, activation=activation,
+                block_m=block_m, block_k=block_k, interpret=interpret,
+            )
+            return y.reshape(*x.shape[:-1], N)
+        xg = jnp.take(x, perm, axis=-1)
+        kmat, w_res = _lm_structured_segments(w2, meta)
+        return paired_matmul(
+            xg, kmat.astype(x.dtype), w_res.astype(x.dtype), b, res,
+            activation=activation,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+
+    def ref(x, w2, b, res, meta):
+        wf = fold_lm_weight(w2, meta, pair_block_n)
+        z = jnp.einsum("...d,df->...f", x, wf)
+        if b is not None:
+            z = z + b
+        z = ACTIVATIONS[activation](z)
+        return z + res.astype(z.dtype) if res is not None else z
+
+    @jax.custom_vjp
+    def f(x, w2, b, res, meta):
+        return primal(x, w2, b, res, meta)
+
+    def fwd(x, w2, b, res, meta):
+        return primal(x, w2, b, res, meta), (x, w2, b, res, meta)
+
+    def bwd(saved, dy):
+        x, w2, b, res, meta = saved
+        _, vjp = jax.vjp(lambda x, w2, b, res: ref(x, w2, b, res, meta),
+                         x, w2, b, res)
+        dx, dw, db, dres = vjp(dy)
+        dmeta = {
+            k: np.zeros(jnp.shape(a), jax.dtypes.float0)
+            if jnp.issubdtype(jnp.result_type(a), jnp.integer)
+            else jnp.zeros_like(a)
+            for k, a in meta.items()
+        }
+        return dx, dw.astype(w2.dtype), db, dres, dmeta
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fused_paired_dense(
+    x: jax.Array,
+    w: jax.Array,  # (K, N) live weights (reshape conv/attn weights first)
+    meta: dict,  # stacked pairing metadata (core.transform.pair_lm_params)
+    bias: jax.Array | None = None,
+    *,
+    activation: str = "none",
+    residual: jax.Array | None = None,
+    pair_block_n: int = 0,
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Differentiable paired GEMM from live weights + frozen LM pairing.
+
+    ``meta`` holds the per-layer lane structure (``I``/``J``/``resid`` +
+    masks); 1-D lane lists select the structured kernel, 2-D ``(B, Pmax)``
+    lists the column-blocked one (``pair_block_n`` is then the pairing
+    block size the metadata was built with).  ``residual`` fuses the
+    sublayer skip connection into the kernel flush.
+    """
+    blocked = meta["I"].ndim == 2
+    if blocked and pair_block_n < 1:
+        raise ValueError("blocked pairing metadata needs pair_block_n >= 1")
+    fn = _fused_paired_dense_grad(
+        activation, blocked, pair_block_n if blocked else 0,
+        block_m, block_n, block_k, interpret,
+    )
+    return fn(x, w, bias, residual, dict(meta))
+
+
+# ---------------------------------------------------------------------------
 # GEMM policy: route model-layer matmuls through the fused kernels
 # ---------------------------------------------------------------------------
 
@@ -305,14 +494,70 @@ def pallas_gemm(
         _policy_state.policy = prev
 
 
+@dataclasses.dataclass(frozen=True)
+class PairedGemmPolicy:
+    """Routing for the *paired* LM GEMM path (``gemm="pallas_paired"``).
+
+    When active, :func:`repro.models.layers.dense` routes every GEMM whose
+    weight carries pairing metadata (``core.transform.pair_lm_params``)
+    through :func:`fused_paired_dense` — the subtractor kernel with the
+    residual-add epilogue.  ``pair_block_n`` is the pairing block size the
+    metadata was built with (0 → structured; it must match, the blocked
+    kernel needs it to reassemble the packed column layout).
+    """
+
+    pair_block_n: int = 0
+    block_m: int = 0
+    block_n: int = 0
+    block_k: int = 0
+    interpret: bool | None = None
+
+
+def current_paired_gemm_policy() -> PairedGemmPolicy | None:
+    return getattr(_policy_state, "paired_gemm", None)
+
+
+@contextlib.contextmanager
+def pallas_paired_gemm(
+    pair_block_n: int = 0,
+    block_m: int = 0,
+    block_n: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+):
+    """Route pairing-annotated layer GEMMs through the subtractor kernel.
+
+    Thread-local and trace-time, like :func:`pallas_gemm`; weights without
+    pairing metadata keep their XLA einsum path.
+    """
+    prev = current_paired_gemm_policy()
+    _policy_state.paired_gemm = PairedGemmPolicy(
+        pair_block_n, block_m, block_n, block_k, interpret
+    )
+    try:
+        yield
+    finally:
+        _policy_state.paired_gemm = prev
+
+
 def gemm_context(knobs):
     """Context manager for a PerfKnobs-like object (``gemm``/``block_*``).
 
     ``knobs.gemm == "pallas"`` activates :func:`pallas_gemm` with the knob
-    tile sizes; anything else is a no-op (XLA einsum path).
+    tile sizes; ``"pallas_paired"`` activates :func:`pallas_paired_gemm`
+    (the subtractor path for pairing-annotated LM weights, honouring
+    ``knobs.pair_block_n``); anything else is a no-op (XLA einsum path).
     """
-    if getattr(knobs, "gemm", "xla") == "pallas":
+    gemm = getattr(knobs, "gemm", "xla")
+    if gemm == "pallas":
         return pallas_gemm(
+            block_m=getattr(knobs, "block_m", 0),
+            block_n=getattr(knobs, "block_n", 0),
+            block_k=getattr(knobs, "block_k", 0),
+        )
+    if gemm == "pallas_paired":
+        return pallas_paired_gemm(
+            pair_block_n=getattr(knobs, "pair_block_n", 0),
             block_m=getattr(knobs, "block_m", 0),
             block_n=getattr(knobs, "block_n", 0),
             block_k=getattr(knobs, "block_k", 0),

@@ -45,6 +45,19 @@ Per-segment k-tiles are padded with zero lanes up to a ``bk`` multiple;
 zero activation lanes × zero weight rows contribute nothing, so no masking
 is needed in the accumulation.
 
+Residual-add epilogue
+=====================
+``residual=`` streams an ``(M, N)`` operand (output-space, e.g. the skip
+branch of a Transformer sublayer) into the flush: it is added on the fp32
+accumulator *after* bias + activation (and after the pooled window
+reduction, when pooling is fused), immediately before the single HBM
+writeback.  A decoder's ``h + attn_out(x)`` / ``h + mlp(x)`` therefore
+stops being a standalone XLA add over a full hidden-state tensor — the
+skip connection rides the same kernel writeback.  The residual may arrive
+in a different dtype than the activations (bf16 skip against an fp32
+accumulator is the common serving case); it is promoted to fp32 for the
+add and the result is cast once to the output dtype.
+
 Fused pooling epilogue (the conv→pool→activation megakernel)
 ============================================================
 With ``pool="max2"`` / ``"avg2"`` the kernel additionally reduces a 2×2
@@ -151,6 +164,7 @@ def _build_paired_call(
     nkr: int,
     bkr: int,
     has_bias: bool,
+    has_residual: bool,
     activation: str,
     pool: str,
     Mp: int,
@@ -164,7 +178,14 @@ def _build_paired_call(
     The contraction grid has ``nkp`` paired k-steps followed by ``nkr``
     residual k-steps; either count may be zero (but not both).  Inputs are
     ordered ``[xi, xj, kmat][:has_pairs] + [xr, w_res][:has_resid] +
-    [bias][:has_bias]``.
+    [bias][:has_bias] + [residual][:has_residual]``.
+
+    ``has_residual`` streams an output-shaped ``(Mp, Np)`` operand added on
+    the fp32 accumulator in the flush, after bias/activation (and after the
+    pooled reduction) — the fused skip connection.  It is indexed like the
+    output tile, so it works identically in the blocked layout (the
+    residual lives in output space; blocks only partition the contraction
+    metadata).
 
     ``pool != "none"`` selects the megakernel layout: activation operands
     are window-major ``(4, Mp, K)``, the accumulator grows a leading window
@@ -211,6 +232,7 @@ def _build_paired_call(
         refs = list(refs)
         acc_ref = refs.pop()
         o_ref = refs.pop()
+        r_ref = refs.pop() if has_residual else None
         b_ref = refs.pop() if has_bias else None
         it = iter(refs)
         k = pl.program_id(2)
@@ -278,6 +300,11 @@ def _build_paired_call(
             acc = _apply_epilogue(acc_ref[...], bias_block, activation)
             if has_pool:
                 acc = POOLS[pool](acc)  # (4, bm, bn) → (bm, bn) in VMEM
+            if has_residual:
+                # fused skip connection: fp32 add after bias/activation/pool,
+                # still inside VMEM — the residual never costs its own HBM
+                # round-trip through a standalone add op
+                acc = acc + r_ref[...].astype(jnp.float32)
             o_ref[...] = acc.astype(o_ref.dtype)
 
     # --- block specs: each segment's index map clamps into its own range ---
@@ -309,6 +336,9 @@ def _build_paired_call(
         in_specs += [x_spec(bkr, rk), w_spec(bkr, rk)]
     if has_bias:
         in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
+    if has_residual:
+        # output-space operand: indexed exactly like the output tile
+        in_specs.append(pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)))
 
     kwargs = {}
     if not interpret:
@@ -339,6 +369,7 @@ def paired_matmul_pallas(
     w_res: jax.Array,  # (R, N) residual weights, R = K - 2P
     bias: jax.Array | None = None,  # (N,) fused epilogue bias
     *,
+    residual: jax.Array | None = None,  # (M, N) fused skip-connection add
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
@@ -357,6 +388,11 @@ def paired_matmul_pallas(
     of pooled output row ``m`` — and the result is the *pooled* ``(M, N)``
     map, reduced in VMEM before the single HBM writeback (see the module
     docstring, "Fused pooling epilogue").
+
+    ``residual`` fuses an output-shaped skip-connection add into the flush
+    (after bias/activation/pool, fp32, before the single writeback — see
+    the module docstring, "Residual-add epilogue"); with pooling it must
+    already be the pooled ``(M, N)`` map.
     """
     assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
     has_pool = pool != "none"
@@ -371,6 +407,10 @@ def paired_matmul_pallas(
     R = w_res.shape[0]
     assert K == 2 * P + R, f"layout mismatch: K={K} vs 2P+R={2*P+R}"
     assert activation in ACTIVATIONS, f"unknown activation {activation!r}"
+    if residual is not None:
+        assert residual.shape == (M, N), (
+            f"residual must be output-shaped {(M, N)}, got {residual.shape}"
+        )
 
     xi = x[..., :P]
     xj = x[..., P : 2 * P]
@@ -383,6 +423,8 @@ def paired_matmul_pallas(
         y = _apply_epilogue(y, b, activation)
         if has_pool:
             y = POOLS[pool](y)
+        if residual is not None:
+            y = y + residual.astype(jnp.float32)
         return y.astype(x.dtype)
 
     m_axis, k_axis = x.ndim - 2, x.ndim - 1
@@ -413,10 +455,13 @@ def paired_matmul_pallas(
         ]
     if bias is not None:
         operands.append(_pad_to(bias[None], 1, Np))
+    if residual is not None:
+        operands.append(_pad_to(_pad_to(residual, 0, Mp), 1, Np))
 
     call = _build_paired_call(
         bm=bm, bn=bn, nkp=nkp, bkp=bkp, nkr=nkr, bkr=bkr,
-        has_bias=bias is not None, activation=activation, pool=pool,
+        has_bias=bias is not None, has_residual=residual is not None,
+        activation=activation, pool=pool,
         Mp=Mp, Np=Np, out_dtype=x.dtype, interpret=interpret,
     )
     out = call(*operands)
@@ -430,6 +475,7 @@ def paired_matmul_blocked_pallas(
     bias: jax.Array | None = None,  # (N,) fused epilogue bias
     *,
     n_cols: int,
+    residual: jax.Array | None = None,  # (M, n_cols) fused skip-connection add
     block_m: int = 128,
     block_k: int = 512,
     activation: str = "none",
@@ -446,9 +492,11 @@ def paired_matmul_blocked_pallas(
     block ``b`` of ``x`` is permuted to block ``b``'s lane order.  Only the
     last block may cover fewer than ``bn`` real columns (``n_cols`` trims
     the padding); the lane tile is pinned to ``bn`` — the pairing block size
-    *is* the kernel's n-tile.  Epilogue (bias + activation) and the fused
-    2×2 pooling (``x`` then ``(B, 4, M, K')`` window-major) behave exactly
-    as in :func:`paired_matmul_pallas`, per block.
+    *is* the kernel's n-tile.  Epilogue (bias + activation), the fused
+    2×2 pooling (``x`` then ``(B, 4, M, K')`` window-major) and the
+    residual-add epilogue (``residual`` lives in *output* space, so it is
+    indexed like the output tile — blocks only partition the contraction
+    metadata) behave exactly as in :func:`paired_matmul_pallas`, per block.
     """
     assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
     has_pool = pool != "none"
@@ -467,6 +515,10 @@ def paired_matmul_blocked_pallas(
     assert Kp == 2 * P + R, f"packed layout mismatch: K'={Kp} vs 2P+R={2*P+R}"
     assert 0 < n_cols <= B * bn, (n_cols, B, bn)
     assert activation in ACTIVATIONS, f"unknown activation {activation!r}"
+    if residual is not None:
+        assert residual.shape == (M, n_cols), (
+            f"residual must be output-shaped {(M, n_cols)}, got {residual.shape}"
+        )
 
     xi = x[..., :P]
     xj = x[..., P : 2 * P]
@@ -479,6 +531,8 @@ def paired_matmul_blocked_pallas(
         y = _apply_epilogue(y, b, activation)
         if has_pool:
             y = POOLS[pool](y)
+        if residual is not None:
+            y = y + residual.astype(jnp.float32)
         return y.astype(x.dtype)
 
     m_axis, k_axis = x.ndim - 2, x.ndim - 1
@@ -507,10 +561,13 @@ def paired_matmul_blocked_pallas(
         ]
     if bias is not None:
         operands.append(_pad_to(bias[None], 1, Np))
+    if residual is not None:
+        operands.append(_pad_to(_pad_to(residual, 0, Mp), 1, Np))
 
     call = _build_paired_call(
         bm=bm, bn=bn, nkp=nkp, bkp=bkp, nkr=nkr, bkr=bkr,
-        has_bias=bias is not None, activation=activation, pool=pool,
+        has_bias=bias is not None, has_residual=residual is not None,
+        activation=activation, pool=pool,
         Mp=Mp, Np=Np, out_dtype=x.dtype, interpret=interpret, n_blocks=B,
     )
     out = call(*operands)
@@ -522,6 +579,7 @@ def dense_matmul_pallas(
     w: jax.Array,
     bias: jax.Array | None = None,
     *,
+    residual: jax.Array | None = None,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
@@ -536,7 +594,7 @@ def dense_matmul_pallas(
     """
     P0 = jnp.zeros((0, w.shape[1]), w.dtype)
     return paired_matmul_pallas(
-        x, P0, w, bias,
+        x, P0, w, bias, residual=residual,
         block_m=block_m, block_n=block_n, block_k=block_k,
         activation=activation, interpret=interpret,
     )

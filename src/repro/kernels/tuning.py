@@ -64,12 +64,15 @@ def kernel_vmem_bytes(
     has_resid: bool = True,
     double_buffer: bool = True,
     pool_window: int = 1,
+    residual: bool = False,
 ) -> int:
     """Estimated VMEM working set of one program of the paired kernel.
 
     ``pool_window > 1`` models the fused-pooling megakernel: every
     activation stream and the fp32 accumulator carry the window axis; the
-    weight tiles and the (pooled) output tile do not.
+    weight tiles and the (pooled) output tile do not.  ``residual`` models
+    the fused skip-connection epilogue: one extra output-shaped ``(bm, bn)``
+    operand streamed (double-buffered) alongside the activations.
     """
     x_streams = 0
     w_streams = 0
@@ -79,6 +82,8 @@ def kernel_vmem_bytes(
     if has_resid:
         x_streams += bm * bk  # xr tile
         w_streams += bk * bn  # w_res tile
+    if residual:
+        w_streams += bm * bn  # fused-residual tile (output-shaped stream)
     buf = 2 if double_buffer else 1
     streams = pool_window * x_streams + w_streams
     fixed = pool_window * bm * bn * 4 + bm * bn * dtype_bytes  # acc + out
@@ -110,6 +115,7 @@ def cache_key(
     dtype_bytes: int = 2,
     pool: str = "none",
     blocks: int = 1,
+    residual: bool = False,
 ) -> str:
     """Stable key for one kernel problem: (M, N, K, dtype, segments, pool).
 
@@ -117,12 +123,15 @@ def cache_key(
     differently depending on how many lanes pair off, so it is part of the
     problem identity, not just K.  ``blocks > 1`` marks the column-blocked
     layout (per-n-block segment metadata; N/P/R are then the *per-block*
-    lane counts) — the suffix is only appended for blocked problems so
-    existing persisted caches keep their keys.
+    lane counts) and ``residual`` the fused skip-connection epilogue (one
+    extra output-shaped stream competing for VMEM) — each suffix is only
+    appended when active so existing persisted caches keep their keys.
     """
     K = 2 * P + R
     dt = dtype or f"b{dtype_bytes}"
     suffix = f"-x{blocks}" if blocks > 1 else ""
+    if residual:
+        suffix += "-res"
     return f"M{M}-N{N}-K{K}-{dt}-p{P}r{R}-{pool}{suffix}"
 
 
@@ -234,6 +243,7 @@ def choose_blocks(
     pool: str = "none",
     use_cache: bool = True,
     blocks: int = 1,
+    residual: bool = False,
 ) -> TileConfig:
     """Pick (block_m, block_n, block_k) for a paired GEMM of the given shape.
 
@@ -241,7 +251,8 @@ def choose_blocks(
     dense GEMM of contraction length ``R``); ``pool`` budgets the fused 2×2
     pooling epilogue's window-major streams.  For the column-blocked layout
     pass ``blocks=n_blocks`` with the *per-block* (N, P, R) — the lane tile
-    is pinned to N there, so only block_m/block_k are really free.  A warm
+    is pinned to N there, so only block_m/block_k are really free.
+    ``residual`` budgets the fused skip-connection stream.  A warm
     :class:`TileCache` entry (installed via :class:`use_tile_cache`) is
     returned in preference to the heuristic.
     """
@@ -250,7 +261,7 @@ def choose_blocks(
         if cache is not None:
             hit = cache.get(cache_key(
                 M, N, P, R, dtype=dtype, dtype_bytes=dtype_bytes, pool=pool,
-                blocks=blocks,
+                blocks=blocks, residual=residual,
             ))
             if hit is not None:
                 return hit
@@ -272,7 +283,7 @@ def choose_blocks(
                 bm, bn, bk_eff,
                 dtype_bytes=dtype_bytes,
                 has_pairs=has_pairs, has_resid=has_resid,
-                pool_window=pw,
+                pool_window=pw, residual=residual,
             )
             <= vmem_budget
         ):
@@ -285,7 +296,7 @@ def choose_blocks(
             bm, bn, bk,
             dtype_bytes=dtype_bytes,
             has_pairs=has_pairs, has_resid=has_resid,
-            pool_window=pw,
+            pool_window=pw, residual=residual,
         )
         > vmem_budget
     ):
@@ -309,13 +320,14 @@ def resolve_blocks(
     dtype: str = "",
     pool: str = "none",
     blocks: int = 1,
+    residual: bool = False,
 ) -> TileConfig:
     """Fill any zero block size from the cache/heuristic (explicit wins)."""
     if block_m and block_n and block_k:
         return TileConfig(block_m, block_n, block_k)
     auto = choose_blocks(
         M, N, P, R, dtype_bytes=dtype_bytes, dtype=dtype, pool=pool,
-        blocks=blocks,
+        blocks=blocks, residual=residual,
     )
     return TileConfig(
         block_m or auto.block_m,

@@ -38,9 +38,19 @@ def main() -> None:
                          "for kernel artifacts); n >= 1 → column-blocked "
                          "pairing with one shared-row pairing per n output "
                          "channels (kernel-executable; 1 == per-column)")
-    ap.add_argument("--gemm", choices=("xla", "pallas"), default="xla",
+    ap.add_argument("--gemm", choices=("xla", "pallas", "pallas_paired"),
+                    default="xla",
                     help="route layer GEMMs through the fused K-tiled "
-                         "Pallas kernel (interpret mode off-TPU)")
+                         "Pallas kernel (interpret mode off-TPU); "
+                         "pallas_paired runs the decoder qkv/out-proj/MLP "
+                         "GEMMs on the subtractor kernel with the sublayer "
+                         "residual adds fused into the epilogue "
+                         "(see --pair-rounding / --pair-block-n)")
+    ap.add_argument("--pair-rounding", type=float, default=0.0,
+                    help="rounding size for the pallas_paired LM pairing "
+                         "artifacts (live-weight kernel path, distinct from "
+                         "--paired-rounding's offline weight folding); 0.0 "
+                         "is the exact-parity point")
     ap.add_argument("--conv", choices=CONV_IMPLS, default="xla",
                     help="conv lowering for conv-bearing models: plain "
                          "lax.conv, im2col patch GEMM, or the paired "
@@ -75,8 +85,18 @@ def main() -> None:
     knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none",
                         gemm=args.gemm, conv=args.conv, block_k=args.block_k,
                         fuse_pool=args.fuse_pool, tile_cache=args.tile_cache,
-                        pair_block_n=args.pair_block_n)
+                        pair_block_n=args.pair_block_n,
+                        pair_rounding=args.pair_rounding)
     eng = ServeEngine(cfg, params, max_seq=args.max_seq, batch_size=args.batch, knobs=knobs)
+    if eng.pair_report is not None:
+        rp = eng.pair_report
+        print(f"[serve] paired-kernel LM path ({rp.mode}"
+              f"{f', block_n={args.pair_block_n}' if args.pair_block_n else ''}"
+              f", rounding {args.pair_rounding}): "
+              f"{rp.total_pairs} per-column-equivalent pairs across "
+              f"{len(rp.leaves)} decoder weights "
+              f"({100 * rp.pair_fraction:.1f}% of paired-eligible weights); "
+              f"residual adds fused into the kernel epilogue")
     rng = np.random.default_rng(0)
     prompts = {
         i: rng.integers(0, cfg.vocab, size=(8 + 4 * i,)).astype(np.int32)

@@ -97,30 +97,55 @@ def activation(name: str, x: jax.Array) -> jax.Array:
 
 
 def dense(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
-          act: str | None = None) -> jax.Array:
-    """GEMM over the last axis with optional bias + activation.
+          act: str | None = None, *, pairing: dict | None = None,
+          residual: jax.Array | None = None) -> jax.Array:
+    """GEMM over the last axis with optional bias + activation + residual.
 
     The single dispatch point between the XLA einsum path (default) and the
-    K-tiled, epilogue-fused Pallas kernels: when a
-    :func:`repro.kernels.ops.pallas_gemm` policy is active (serving engine /
-    step builders with ``PerfKnobs(gemm="pallas")``), the matmul, bias add
-    and activation all run inside one kernel and skip the extra HBM
-    round-trip.
+    K-tiled, epilogue-fused Pallas kernels:
+
+    * a :func:`repro.kernels.ops.pallas_paired_gemm` policy
+      (``PerfKnobs(gemm="pallas_paired")``) routes any call that carries
+      ``pairing`` metadata (``core.transform.pair_lm_params``) through the
+      *subtractor* kernel — pair magnitudes recomputed from the live ``w``,
+      bias/activation/``residual`` all fused into the single writeback;
+    * a :func:`repro.kernels.ops.pallas_gemm` policy
+      (``PerfKnobs(gemm="pallas")``) routes the matmul + bias + activation
+      through the plain fused kernel;
+    * otherwise the XLA einsum path runs (``pairing`` is ignored there: the
+      live weights ARE the r=0-exact reference the paired path is tested
+      against).
+
+    ``residual`` is an output-shaped skip connection added *after* the
+    activation — on the paired path it executes inside the kernel epilogue,
+    on the other paths as a plain add, so callers can thread their
+    ``h + sublayer(x)`` through unconditionally.
     """
     from repro.kernels import ops as kops
 
+    ppol = kops.current_paired_gemm_policy()
+    if pairing is not None and ppol is not None:
+        return kops.fused_paired_dense(
+            x, w, pairing, bias, activation=act or "none", residual=residual,
+            pair_block_n=ppol.pair_block_n,
+            block_m=ppol.block_m, block_n=ppol.block_n, block_k=ppol.block_k,
+            interpret=ppol.interpret,
+        )
     pol = kops.current_gemm_policy()
     if pol is not None:
-        return kops.fused_dense(
+        y = kops.fused_dense(
             x, w, bias, activation=act or "none",
             block_m=pol.block_m, block_n=pol.block_n, block_k=pol.block_k,
             interpret=pol.interpret,
         )
+        return y + residual.astype(y.dtype) if residual is not None else y
     y = jnp.einsum("...d,df->...f", x, w)
     if bias is not None:
         y = y + bias
     if act:
         y = activation(act, y)
+    if residual is not None:
+        y = y + residual.astype(y.dtype)
     return y
 
 
@@ -318,9 +343,19 @@ def init_attention(cfg: ModelConfig, key) -> dict:
 
 def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
     cdt = x.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    d = x.shape[-1]
+
+    def proj(name):
+        # flattened-head GEMM view so the projection goes through `dense`
+        # (and with it the paired-kernel policy, when `name`'s weight
+        # carries pair_lm_params metadata)
+        w = p[name].astype(cdt)
+        heads, hd = w.shape[-2], w.shape[-1]
+        y = dense(x, w.reshape(d, heads * hd),
+                  pairing=p.get(name + "_pairing"))
+        return y.reshape(*x.shape[:-1], heads, hd)
+
+    q, k, v = proj("wq"), proj("wk"), proj("wv")
     if cfg.qkv_bias:
         q = q + p["bq"].astype(cdt)
         k = k + p["bk"].astype(cdt)
@@ -332,6 +367,24 @@ def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     return q, k, v
+
+
+def attn_out_proj(p: dict, out: jax.Array,
+                  residual: jax.Array | None = None) -> jax.Array:
+    """Attention output projection through `dense`, flattened-head view.
+
+    ``residual`` is the sublayer's skip connection (the pre-attention
+    hidden state): under the paired-GEMM policy it fuses into the kernel's
+    residual-add epilogue — the decoder's ``h + attn(x)`` stops being a
+    standalone add — and on the XLA path it is the same plain add as
+    before.
+    """
+    cdt = out.dtype
+    wo = p["wo"].astype(cdt)
+    H, hd, d = wo.shape
+    o2 = out.reshape(*out.shape[:-2], H * hd)
+    return dense(o2, wo.reshape(H * hd, d),
+                 pairing=p.get("wo_pairing"), residual=residual)
 
 
 def attention_block(
@@ -355,7 +408,7 @@ def attention_block(
         q, k, v, causal=causal, window=window, n_sink=n_sink,
         q_chunk=q_chunk, k_chunk=k_chunk,
     )
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return attn_out_proj(p, out)
 
 
 def attention_decode_block(
@@ -367,6 +420,7 @@ def attention_decode_block(
     *,
     window: int = 0,
     n_sink: int = 0,
+    residual: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
     q, k, v = _qkv(cfg, p, x, pos[:, None])
     B = x.shape[0]
@@ -374,7 +428,7 @@ def attention_decode_block(
     k_cache = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
     v_cache = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
     out = decode_attention(q, k_cache, v_cache, pos, window=window, n_sink=n_sink)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = attn_out_proj(p, out, residual=residual)
     return y, {"k": k_cache, "v": v_cache}
 
 
@@ -491,12 +545,18 @@ def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
     }
 
 
-def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array,
+              residual: jax.Array | None = None) -> jax.Array:
+    """Gated MLP; ``residual`` fuses the sublayer skip connection into the
+    down-projection (kernel epilogue under the paired policy, plain add
+    otherwise)."""
     cdt = x.dtype
-    g = dense(x, p["w_gate"].astype(cdt), act=cfg.act)
-    u = dense(x, p["w_up"].astype(cdt))
+    g = dense(x, p["w_gate"].astype(cdt), act=cfg.act,
+              pairing=p.get("w_gate_pairing"))
+    u = dense(x, p["w_up"].astype(cdt), pairing=p.get("w_up_pairing"))
     h = constrain(g * u, "batch", None, "ff")
-    return dense(h, p["w_down"].astype(cdt))
+    return dense(h, p["w_down"].astype(cdt),
+                 pairing=p.get("w_down_pairing"), residual=residual)
 
 
 # ---------------------------------------------------------------------------

@@ -47,8 +47,17 @@ class PerfKnobs:
     attn_fused: bool = False  # account flash-attention interiors as
     # VMEM-resident (the validated Pallas kernel replaces them on TPU);
     # launch/dryrun then adds the kernel's boundary HBM traffic analytically
-    gemm: str = "xla"  # "xla" | "pallas" — route layer GEMMs (layers.dense)
-    # through the K-tiled epilogue-fused Pallas kernel instead of XLA einsums
+    gemm: str = "xla"  # "xla" | "pallas" | "pallas_paired" — route layer
+    # GEMMs (layers.dense) through the K-tiled epilogue-fused Pallas kernel
+    # instead of XLA einsums; "pallas_paired" additionally routes every
+    # weight carrying pair_lm_params metadata (attention qkv/out, MLP
+    # up/gate/down) through the *subtractor* kernel, with the sublayer
+    # residual adds fused into the kernel epilogue
+    pair_rounding: float = 0.0  # rounding size for the LM pairing artifacts
+    # (gemm="pallas_paired"): ServeEngine builds pair_lm_params(params,
+    # pair_rounding, mode from pair_block_n) when the params don't already
+    # carry metadata.  0.0 pairs nothing but still exercises the full
+    # permuted-gather + kernel path (the r=0 parity anchor)
     conv: str = "xla"  # "xla" | "im2col" | "pallas_paired" — conv lowering
     # (models.lenet consults the policy; LM archs have no 2-D convs, no-op)
     fuse_pool: bool = False  # conv→pool megakernel: absorb the 2×2 max-pool
@@ -258,11 +267,14 @@ def layer_fwd(
                 a, cache = _mla_with_cache(cfg, p["attn"], x, positions, knobs)
             else:
                 a = L.mla_block(cfg, p["attn"], x, positions, q_chunk=knobs.q_chunk, k_chunk=knobs.k_chunk)
+            h = h + a
         else:
-            a, cache = _attn_with_cache(
-                cfg, p["attn"], x, positions, window, n_sink, knobs, collect_cache
+            # the skip connection rides the out-projection (fused into the
+            # paired kernel's epilogue under gemm="pallas_paired")
+            h, cache = _attn_with_cache(
+                cfg, p["attn"], x, positions, window, n_sink, knobs,
+                collect_cache, residual=h,
             )
-        h = h + a
         if kind == "encdec":
             xq = L.apply_norm(p["lnx"], h)
             h = h + _cross_attention(cfg, p["xattn"], xq, enc_out, knobs)
@@ -271,15 +283,16 @@ def layer_fwd(
         x2 = L.apply_norm(p["ln2"], h)
         if "moe" in p:
             y2, aux = L.moe_block(cfg, p["moe"], x2)
+            h = h + y2
         else:
-            y2 = L.mlp_block(cfg, p["mlp"], x2)
-        h = h + y2
+            h = L.mlp_block(cfg, p["mlp"], x2, residual=h)
 
     h = constrain(h, "batch", "seq", None)
     return h, aux, cache
 
 
-def _attn_with_cache(cfg, p, x, positions, window, n_sink, knobs, collect_cache):
+def _attn_with_cache(cfg, p, x, positions, window, n_sink, knobs, collect_cache,
+                     residual=None):
     q, k, v = L._qkv(cfg, p, x, positions)
     q = constrain(q, "batch", None, "q_heads", None)
     k = constrain(k, "batch", None, "kv_heads", None)
@@ -288,7 +301,7 @@ def _attn_with_cache(cfg, p, x, positions, window, n_sink, knobs, collect_cache)
         q, k, v, causal=True, window=window, n_sink=n_sink,
         q_chunk=knobs.q_chunk, k_chunk=knobs.k_chunk,
     )
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = L.attn_out_proj(p, out, residual=residual)
     cache = None
     if collect_cache:
         k = constrain(k, "batch", "cache_seq", "kv_heads", "head_dim")
@@ -716,13 +729,14 @@ def layer_decode(
                 cfg, p["attn"], x, {"c_kv": c["c_kv"], "k_rope": c["k_rope"]}, pos
             )
             c_out.update(mla_c)
+            h = h + a
         else:
-            a, attn_c = L.attention_decode_block(
+            # skip connection fused into the out-projection epilogue
+            h, attn_c = L.attention_decode_block(
                 cfg, p["attn"], x, {"k": c["k"], "v": c["v"]}, pos,
-                window=window, n_sink=n_sink,
+                window=window, n_sink=n_sink, residual=h,
             )
             c_out.update(attn_c)
-        h = h + a
         if kind == "encdec":
             xq = L.apply_norm(p["lnx"], h)
             # cross attention against the precomputed encoder K/V
@@ -738,9 +752,9 @@ def layer_decode(
         x2 = L.apply_norm(p["ln2"], h)
         if "moe" in p:
             y2, _ = L.moe_block(cfg, p["moe"], x2)
+            h = h + y2
         else:
-            y2 = L.mlp_block(cfg, p["mlp"], x2)
-        h = h + y2
+            h = L.mlp_block(cfg, p["mlp"], x2, residual=h)
     return h, c_out
 
 

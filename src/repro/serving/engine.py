@@ -39,8 +39,31 @@ class ServeEngine:
         self.tokens = jnp.zeros((self.batch_size, 1), jnp.int32)
         self.active = np.zeros((self.batch_size,), bool)
 
+        # gemm == "pallas_paired" needs per-weight pairing metadata
+        # (core.transform.pair_lm_params) next to the decoder weights.  If
+        # the caller hasn't preprocessed the params already, run the paper's
+        # one-time preprocessing here — knobs.pair_rounding sets the rounding
+        # size, knobs.pair_block_n the pairing-spectrum point (0 →
+        # structured shared-row pairing, n ≥ 1 → column-blocked, 1 == the
+        # paper's per-column pairing).  The weights themselves stay live
+        # (magnitudes recompute inside the traced step).
+        self.pair_report = None
+        if self.knobs.gemm == "pallas_paired":
+            from repro.core.transform import has_lm_pairing, pair_lm_params
+            from repro.kernels.ops import paired_mode_of
+
+            if not has_lm_pairing(self.params):
+                mode, block_n = paired_mode_of(self.knobs)
+                self.params, self.pair_report = pair_lm_params(
+                    self.params, self.knobs.pair_rounding,
+                    mode=mode, block_n=block_n,
+                )
+
         # knobs.gemm == "pallas" routes every layers.dense GEMM in the traced
-        # step through the fused K-tiled kernel, knobs.conv selects the conv
+        # step through the fused K-tiled kernel ("pallas_paired" routes the
+        # pairing-annotated decoder GEMMs through the subtractor kernel, with
+        # the sublayer residual adds fused into its epilogue), knobs.conv
+        # selects the conv
         # lowering for conv-bearing models (knobs.fuse_pool additionally
         # fuses 2×2 pooling into the conv epilogue, knobs.pair_block_n the
         # pairing-mode spectrum point the conv artifacts use), and

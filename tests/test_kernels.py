@@ -155,6 +155,125 @@ def test_epilogue_bias_and_activation():
         )
 
 
+# ---------------------------------------------------------------------------
+# residual-add epilogue (the fused skip connection)
+# ---------------------------------------------------------------------------
+
+
+def test_residual_epilogue_matches_reference():
+    """Fused residual == act(GEMM + bias) + residual, added after the
+    activation on the fp32 accumulator."""
+    M, P, R, N = 24, 16, 16, 20
+    rng = np.random.default_rng(71)
+    x, kmat, w_res = _rand_case(rng, M, P, R, N, jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(M, N)), jnp.float32)
+    for act, fn in [("none", lambda y: y), ("relu", jax.nn.relu)]:
+        got = paired_matmul(
+            x, kmat, w_res, bias, res,
+            block_m=16, block_n=16, block_k=8, activation=act,
+        )
+        want = fn(paired_matmul_ref(x, kmat, w_res) + bias) + res
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4,
+            err_msg=f"activation={act}",
+        )
+
+
+def test_residual_none_is_backcompat():
+    """residual=None must be byte-identical to omitting the argument."""
+    rng = np.random.default_rng(72)
+    x, kmat, w_res = _rand_case(rng, 10, 8, 8, 12, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(12,)), jnp.float32)
+    a = paired_matmul(x, kmat, w_res, b, block_m=8, block_n=8)
+    c = paired_matmul(x, kmat, w_res, b, None, block_m=8, block_n=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_residual_dtype_promotion_bf16():
+    """bf16 residual against fp32 activations (and vice versa): the add
+    happens on the fp32 accumulator, then one cast to the output dtype."""
+    M, P, R, N = 12, 32, 16, 24
+    rng = np.random.default_rng(73)
+    # bf16 residual, fp32 GEMM: promoted exactly (bf16 ⊂ fp32)
+    x, kmat, w_res = _rand_case(rng, M, P, R, N, jnp.float32)
+    res16 = jnp.asarray(rng.normal(size=(M, N)), jnp.bfloat16)
+    got = paired_matmul(x, kmat, w_res, None, res16, block_m=8, block_n=8)
+    want = paired_matmul_ref(x, kmat, w_res) + res16.astype(jnp.float32)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # bf16 GEMM, fp32 residual: the accumulator sees the full-precision
+    # residual; only the final cast rounds to bf16
+    xb, kb, wb = _rand_case(rng, M, P, R, N, jnp.bfloat16)
+    res32 = jnp.asarray(rng.normal(size=(M, N)), jnp.float32)
+    got_b = paired_matmul(xb, kb, wb, None, res32, block_m=8, block_n=8)
+    want_b = (
+        np.asarray(paired_matmul_ref(xb, kb, wb), np.float32)
+        + np.asarray(res32)
+    )
+    assert got_b.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got_b, np.float32), want_b, rtol=5e-2, atol=5e-2
+    )
+
+
+def test_blocked_residual_parity():
+    """Column-blocked kernel with a fused residual == x @ fold() + res."""
+    from repro.core.pairing import pair_rows_blocked
+    from repro.kernels.ops import paired_matmul_blocked
+
+    rng = np.random.default_rng(74)
+    half = rng.normal(size=(20, 12)) + 1.5
+    W = np.concatenate([half, -half + rng.normal(size=(20, 12)) * 0.05])
+    x = jnp.asarray(rng.normal(size=(9, 40)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(9, 12)), jnp.float32)
+    for block_n in (1, 4, 12):
+        bp = pair_rows_blocked(W, 0.5, block_n)
+        idx = bp.index_arrays()
+        xg = jnp.moveaxis(jnp.take(x, jnp.asarray(idx["perm"]), axis=-1), 1, 0)
+        kmat, w_res = bp.packed_weights()
+        got = paired_matmul_blocked(
+            xg, jnp.asarray(kmat, jnp.float32), jnp.asarray(w_res, jnp.float32),
+            None, res, n_cols=12, block_m=8, block_k=16,
+        )
+        want = x @ jnp.asarray(bp.fold(), jnp.float32) + res
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4,
+            err_msg=f"block_n={block_n}",
+        )
+
+
+@cases(10, M=integers(1, 24), P=integers(0, 16), R=integers(0, 16),
+       N=integers(1, 24), seed=seeds())
+def test_residual_epilogue_property(M, P, R, N, seed):
+    """Property: fused residual == ref + residual across random shapes,
+    including the degenerate P == 0 / R == 0 segments."""
+    if P + R == 0:
+        R = 1
+    rng = np.random.default_rng(seed)
+    x, kmat, w_res = _rand_case(rng, M, P, R, N, jnp.float32)
+    res = jnp.asarray(rng.normal(size=(M, N)), jnp.float32)
+    got = paired_matmul(x, kmat, w_res, None, res, block_m=16, block_n=16)
+    want = paired_matmul_ref(x, kmat, w_res) + res
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_residual_tuning_key_and_vmem():
+    """The residual stream is part of the problem identity: the cache key
+    gains a -res suffix (back-compat for existing entries) and the VMEM
+    model charges the extra output-shaped stream."""
+    from repro.kernels.tuning import cache_key, kernel_vmem_bytes
+
+    plain = cache_key(64, 128, 16, 32)
+    withres = cache_key(64, 128, 16, 32, residual=True)
+    assert withres == plain + "-res"
+    assert kernel_vmem_bytes(64, 64, 128, residual=True) > kernel_vmem_bytes(
+        64, 64, 128, residual=False
+    )
+
+
 def test_dense_epilogue_matches_xla():
     rng = np.random.default_rng(41)
     x = jnp.asarray(rng.normal(size=(33, 130)), jnp.float32)
