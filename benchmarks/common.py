@@ -1,9 +1,22 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+The jaxpr-walking audits (``count_primitives``, ``count_shape_adds``) live in
+:mod:`repro.analysis.jaxpr_walk` — the repo's single walker implementation —
+and are re-exported here for the benches that import them by their historical
+names.
+"""
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Any, Sequence
+from collections.abc import Sequence
+from typing import Any
+
+from repro.analysis.jaxpr_walk import (  # noqa: F401  (re-exports)
+    count_primitives,
+    count_shape_adds,
+    walk_eqns as _walk_eqns,
+)
 
 RESULTS_DIR = Path(__file__).parent / "results"
 
@@ -13,47 +26,6 @@ def write_result(name: str, payload: Any) -> Path:
     path = RESULTS_DIR / f"{name}.json"
     path.write_text(json.dumps(payload, indent=2, default=str))
     return path
-
-
-def _walk_eqns(jaxpr):
-    """Yield every eqn of a (closed) jaxpr, descending into call /
-    custom-vjp / scan / pallas sub-jaxprs carried in eqn params — one walk
-    shared by every traced-program audit below."""
-    inner = getattr(jaxpr, "jaxpr", jaxpr)
-    for eqn in inner.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for s in v if isinstance(v, (list, tuple)) else [v]:
-                if hasattr(s, "jaxpr") or hasattr(s, "eqns"):
-                    yield from _walk_eqns(s)
-
-
-def count_primitives(jaxpr, name: str) -> int:
-    """Count occurrences of a primitive across the whole traced program —
-    used to audit the fused conv path's schedule (e.g. ``reduce_window_max``
-    must be absent, ``pallas_call`` counts HBM writebacks of the conv
-    layers)."""
-    return sum(1 for eqn in _walk_eqns(jaxpr) if eqn.primitive.name == name)
-
-
-def count_shape_adds(jaxpr, shape: Sequence[int]) -> int:
-    """Count ``add`` eqns whose output *and both operands* have ``shape``.
-
-    An ``add`` of two full hidden-state tensors is the signature of a
-    standalone residual add (``h + attn(x)`` / ``h + mlp(x)``) — bias adds
-    and norm arithmetic broadcast from lower-rank operands and never match.
-    Used to audit that the paired decode step executes its residual adds
-    inside the kernel epilogue instead.
-    """
-    shape = tuple(shape)
-
-    def is_resid_add(eqn):
-        if eqn.primitive.name != "add":
-            return False
-        avals = [getattr(v, "aval", None) for v in (*eqn.invars, *eqn.outvars)]
-        return all(getattr(a, "shape", None) == shape for a in avals)
-
-    return sum(1 for eqn in _walk_eqns(jaxpr) if is_resid_add(eqn))
 
 
 def fmt_table(rows: Sequence[dict], cols: Sequence[str], title: str = "") -> str:

@@ -26,12 +26,9 @@ from repro.models.lenet import (
 )
 from repro.train.lenet_trainer import get_trained_lenet
 
-from benchmarks.common import (
-    count_primitives,
-    count_shape_adds,
-    fmt_table,
-    write_result,
-)
+from repro.analysis import RuleContext, run_rules
+
+from benchmarks.common import fmt_table, write_result
 
 ROUNDINGS = [0.0, 0.0001, 0.005, 0.01, 0.015, 0.02, 0.025, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3]
 LM_HEADLINE_ROUNDING = 0.05  # the paper's headline point, applied to the LM
@@ -187,12 +184,13 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
       hold identically — per-block segment metadata adds no extra pooling
       op or kernel launch.
 
-    Besides wall-clock, each variant's *traced program* is audited:
-    ``pool_ops`` counts standalone ``reduce_window_max`` primitives (must be
-    0 on the fused path) and ``conv_kernel_launches`` counts ``pallas_call``s
-    (must equal the 3 conv layers — exactly one writeback each).  The audit
-    is structural, so it holds identically on TPU where the wall-clock
-    numbers become hardware-meaningful.
+    Besides wall-clock, each variant's *traced program* is audited through
+    the ``repro.analysis`` schedule rules: ``pool_ops`` is the measured value
+    of ``schedule/no-standalone-pool`` (must be 0 on the fused path) and
+    ``conv_kernel_launches`` of ``schedule/writebacks-per-program`` (must
+    equal the 3 conv layers — exactly one writeback each).  The audit is
+    structural, so it holds identically on TPU where the wall-clock numbers
+    become hardware-meaningful.
     """
     import jax
     import jax.numpy as jnp
@@ -213,6 +211,10 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
         "paired_fused_blocked": dict(conv_impl="pallas_paired", paired=barts,
                                      fuse_pool=True),
     }
+    schedule_rules = (
+        "schedule/no-standalone-pool",
+        "schedule/writebacks-per-program",
+    )
     out: dict = {}
     y_ref = None
     for name, kw in variants.items():
@@ -224,10 +226,23 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
         if y_ref is None:
             y_ref = y
         t = measure(lambda: fn(params, xb), reps=3, warmup=1)
+        # fused variants carry expectations, so error findings ARE the audit;
+        # the unfused variants run the same rules info-only
+        expect = (
+            {"fused_pool": True, "pallas_calls": len(kw["paired"])}
+            if kw["fuse_pool"] else {}
+        )
+        report = run_rules(
+            RuleContext(target=f"fig8/{name}", jaxpr=jaxpr, expect=expect),
+            rule_ids=schedule_rules,
+        )
         out[name] = {
             "wall_s": t,
-            "pool_ops": count_primitives(jaxpr, "reduce_window_max"),
-            "conv_kernel_launches": count_primitives(jaxpr, "pallas_call"),
+            "pool_ops": report.measured("schedule/no-standalone-pool"),
+            "conv_kernel_launches": report.measured(
+                "schedule/writebacks-per-program"
+            ),
+            "schedule_errors": [f.as_dict() for f in report.errors()],
             "rel_err_vs_xla": float(
                 np.abs(y - y_ref).max() / max(np.abs(y_ref).max(), 1e-30)
             ),
@@ -235,15 +250,10 @@ def fused_pool_path(params, test_x, batch: int = 32) -> dict:
 
     # the schedule audit must hold on both fused layouts (shared-permutation
     # and column-blocked): zero standalone pool ops, one writeback per conv
-    for tag, tag_arts in (("paired_fused", arts), ("paired_fused_blocked", barts)):
+    for tag in ("paired_fused", "paired_fused_blocked"):
         fused = out[tag]
-        assert fused["pool_ops"] == 0, (
-            f"{tag} still launches a standalone pooling op "
-            f"({fused['pool_ops']} reduce_window_max in the traced program)"
-        )
-        assert fused["conv_kernel_launches"] == len(tag_arts), (
-            f"{tag}: expected one kernel writeback per conv layer "
-            f"({len(tag_arts)}), traced {fused['conv_kernel_launches']}"
+        assert not fused["schedule_errors"], (
+            f"{tag} violates the fused schedule: {fused['schedule_errors']}"
         )
         assert fused["rel_err_vs_xla"] <= 1e-5, (
             f"{tag} at rounding 0 must match the XLA reference: "
@@ -374,18 +384,32 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
     tok = jnp.zeros((2, 1), jnp.int32)
     pos = jnp.asarray([5, 11], jnp.int32)
 
-    def trace(p, knobs):
+    def audit(tag, p, knobs, expect):
         with perf_context(knobs):
-            return jax.make_jaxpr(
+            jaxpr = jax.make_jaxpr(
                 lambda p, c, t, s: M.decode_step(cfg, p, c, t, s)
             )(p, cache, tok, pos)
+        return run_rules(
+            RuleContext(target=f"fig8/{tag}", jaxpr=jaxpr,
+                        hidden_shape=h_shape, expect=expect),
+            rule_ids=(
+                "schedule/standalone-residual-adds",
+                "schedule/writebacks-per-decode-layer",
+            ),
+        )
 
     h_shape = (2, 1, cfg.d_model)
-    resid_adds_paired = count_shape_adds(trace(pm, knobs_p), h_shape)
-    resid_adds_xla = count_shape_adds(trace(params, M.PerfKnobs(**base)), h_shape)
-    assert resid_adds_paired == 0, (
-        f"paired decode still executes {resid_adds_paired} standalone "
-        f"residual add(s) — they must ride the kernel epilogue"
+    rep_paired = audit(
+        "lm_decode_paired", pm, knobs_p,
+        # 7 = the paired GEMMs per layer (attn q/k/v/out + MLP gate/up/down)
+        {"residual_adds": 0, "writebacks_per_layer": 7},
+    )
+    rep_xla = audit("lm_decode_xla", params, M.PerfKnobs(**base), {})
+    resid_adds_paired = rep_paired.measured("schedule/standalone-residual-adds")
+    resid_adds_xla = rep_xla.measured("schedule/standalone-residual-adds")
+    assert not rep_paired.errors(), (
+        f"paired decode violates the schedule rules: "
+        f"{[f.as_dict() for f in rep_paired.errors()]}"
     )
     assert resid_adds_xla > 0, (
         "audit is vacuous: the XLA trace shows no residual adds to fuse"
@@ -406,6 +430,9 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
             "hidden_shape": list(h_shape),
             "paired_residual_adds": int(resid_adds_paired),
             "xla_residual_adds": int(resid_adds_xla),
+            "paired_writebacks_per_layer": int(
+                rep_paired.measured("schedule/writebacks-per-decode-layer")
+            ),
         },
     }
     out["perf_summary"] = {

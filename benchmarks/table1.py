@@ -124,7 +124,7 @@ def run(quick: bool = False) -> dict:
         saved = [k["lanes_saved"]] + [
             k["blocked"][bn]["lanes_saved"] for bn in sorted(block_ns, reverse=True)
         ]
-        assert all(a <= b for a, b in zip(saved, saved[1:])), (r, saved)
+        assert all(a <= b for a, b in zip(saved, saved[1:], strict=False)), (r, saved)
 
     out = {
         "rows": rows,

@@ -44,6 +44,6 @@ out_base = base.generate(dict(prompts), args.steps)
 out_pair = pair.generate(dict(prompts), args.steps)
 
 for slot in prompts:
-    agree = sum(a == b for a, b in zip(out_base[slot], out_pair[slot]))
+    agree = sum(a == b for a, b in zip(out_base[slot], out_pair[slot], strict=True))
     print(f"slot {slot}: original {out_base[slot]}")
     print(f"        paired   {out_pair[slot]}  ({agree}/{args.steps} tokens agree)")

@@ -1,0 +1,45 @@
+"""Static analysis over traced jaxprs, compiled HLO, and pairing artifacts.
+
+The package has three layers:
+
+* :mod:`repro.analysis.jaxpr_walk` — the repo's single jaxpr-walking
+  implementation (``walk_eqns``, ``count_primitives``, ``count_shape_adds``);
+* :mod:`repro.analysis.core` — the rule registry, :class:`Finding`,
+  :class:`RuleContext`, and :func:`run_rules` → :class:`AnalysisReport`;
+* ``rules_*`` modules — the registered rules (schedule, dtype, VMEM,
+  pairing artifacts, HLO), imported on the first :func:`run_rules` call.
+
+CLI: ``python -m repro.analysis --target lm_decode [--json report.json]``;
+the exit code is non-zero iff an error-severity finding fires.
+"""
+from repro.analysis.core import (
+    RULE_REGISTRY,
+    AnalysisReport,
+    Finding,
+    Rule,
+    RuleContext,
+    rule,
+    run_rules,
+)
+from repro.analysis.jaxpr_walk import (
+    count_primitives,
+    count_shape_adds,
+    pallas_calls_by_scan,
+    walk_eqns,
+    walk_eqns_with_stack,
+)
+
+__all__ = [
+    "RULE_REGISTRY",
+    "AnalysisReport",
+    "Finding",
+    "Rule",
+    "RuleContext",
+    "count_primitives",
+    "count_shape_adds",
+    "pallas_calls_by_scan",
+    "rule",
+    "run_rules",
+    "walk_eqns",
+    "walk_eqns_with_stack",
+]

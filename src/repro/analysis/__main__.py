@@ -1,0 +1,75 @@
+"""``python -m repro.analysis`` — run the schedule linter over a target.
+
+Exit code is non-zero iff any error-severity finding fires on any requested
+target, which is exactly what the CI ``analysis`` job gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    from repro.analysis.core import run_rules
+    from repro.analysis.targets import TARGETS, build_context
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Rule-based jaxpr/HLO schedule linter: gates fusion, "
+                    "dtype, VMEM, and pairing invariants.",
+    )
+    ap.add_argument(
+        "--target", choices=(*TARGETS, "all"),
+        help="which traced program to lint ('all' runs every target)",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write the machine-readable report here",
+    )
+    ap.add_argument(
+        "--rules", nargs="*", default=None, metavar="RULE_ID",
+        help="run only these rule ids (default: every registered rule)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print every registered rule id and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis.core import RULE_REGISTRY, _load_rules
+
+        _load_rules()
+        for rid, r in sorted(RULE_REGISTRY.items()):
+            needs = f"  [needs: {', '.join(r.needs)}]" if r.needs else ""
+            print(f"{rid}{needs}")
+        return 0
+    if args.target is None:
+        ap.error("--target is required (unless --list-rules)")
+
+    targets = TARGETS if args.target == "all" else (args.target,)
+    reports = []
+    for t in targets:
+        report = run_rules(build_context(t), rule_ids=args.rules)
+        reports.append(report)
+        for line in report.summary_lines():
+            print(line)
+        for rid, need in sorted(report.rules_skipped.items()):
+            print(f"  skipped {rid} (target provides no {need})")
+
+    if args.json:
+        payload = (
+            reports[0].as_dict()
+            if len(reports) == 1
+            else {"targets": [r.as_dict() for r in reports]}
+        )
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
+        print(f"wrote {args.json}")
+
+    return max(r.exit_code for r in reports)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,206 @@
+"""Rule registry, structured findings, and the machine-readable report.
+
+A *rule* is a function from a :class:`RuleContext` (the traced jaxpr, the
+compiled HLO text, the pairing artifacts — whatever the target provides) to
+zero or more :class:`Finding`\\ s.  Rules declare what context they ``need``;
+:func:`run_rules` runs every registered rule whose needs are satisfied and
+records the rest as skipped, so one report always answers "which invariants
+were actually checked".
+
+Severity contract: ``error`` findings are schedule/correctness violations the
+CI job must fail on (:meth:`AnalysisReport.exit_code` is non-zero iff one
+fires); ``warning`` is a suspicious measurement worth a look; ``info``
+findings carry the measured values themselves (writeback counts, convert
+churn, VMEM high-water marks) so benches and CI artifacts can report them
+without re-walking anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections.abc import Callable, Iterable
+from typing import Any
+
+SEVERITIES = ("info", "warning", "error")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One structured result of one rule at one location."""
+
+    rule: str
+    severity: str  # "info" | "warning" | "error"
+    location: str  # target name, artifact path, HLO computation, …
+    message: str
+    measured: Any = None
+    expected: Any = None
+
+    def __post_init__(self):
+        assert self.severity in SEVERITIES, self.severity
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """Everything a target exposes for the rules to inspect.
+
+    Fields are optional: rules declare which ones they need and are skipped
+    (not failed) when a target doesn't provide them — a LeNet forward has no
+    decode loop HLO, a pairing-artifact check needs no trace at all.
+    """
+
+    target: str
+    jaxpr: Any = None  # ClosedJaxpr of the traced program
+    hlo_text: str | None = None  # compiled HLO (``compiled.as_text()``)
+    params: Any = None  # LM param tree (may carry ``*_pairing`` metadata)
+    pairing_artifacts: dict | None = None  # conv {name: PairedLayer}
+    hidden_shape: tuple | None = None  # residual-add signature shape
+    expect: dict = dataclasses.field(default_factory=dict)
+    # per-target expectations, e.g. {"fused_pool": True, "pallas_calls": 3,
+    # "writebacks_per_layer": 7, "residual_adds": 0, "max_converts": 40}
+
+    def has(self, need: str) -> bool:
+        if need == "jaxpr":
+            return self.jaxpr is not None
+        if need == "hlo":
+            return self.hlo_text is not None
+        if need == "hidden_shape":
+            return self.hidden_shape is not None
+        if need == "pairing":
+            return self.pairing_artifacts is not None or self.params is not None
+        raise ValueError(f"unknown rule need {need!r}")
+
+
+@dataclasses.dataclass
+class Rule:
+    id: str
+    needs: tuple[str, ...]
+    fn: Callable[[RuleContext], Iterable[Finding]]
+    doc: str
+
+
+RULE_REGISTRY: dict[str, Rule] = {}
+
+
+def rule(rule_id: str, *, needs: tuple[str, ...] = ()):
+    """Register a rule under ``rule_id`` (e.g. ``"schedule/no-standalone-pool"``).
+
+    ``needs`` lists the :class:`RuleContext` facets the rule requires:
+    ``"jaxpr"``, ``"hlo"``, ``"hidden_shape"``, ``"pairing"``.
+    """
+
+    def deco(fn):
+        assert rule_id not in RULE_REGISTRY, f"duplicate rule id {rule_id}"
+        RULE_REGISTRY[rule_id] = Rule(
+            rule_id, tuple(needs), fn, (fn.__doc__ or "").strip().splitlines()[0]
+        )
+        return fn
+
+    return deco
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    target: str
+    findings: list[Finding]
+    rules_run: list[str]
+    rules_skipped: dict[str, str]  # rule id -> unmet need
+
+    def errors(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def warnings(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "warning"]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.errors() else 0
+
+    def measured(self, rule_id: str, location: str | None = None):
+        """The ``measured`` value of the first finding of ``rule_id`` (at
+        ``location`` if given) — how benches read counts out of a report."""
+        for f in self.findings:
+            if f.rule == rule_id and (location is None or f.location == location):
+                return f.measured
+        raise KeyError(f"no finding for rule {rule_id!r}"
+                       + (f" at {location!r}" if location else ""))
+
+    def as_dict(self) -> dict:
+        return {
+            "target": self.target,
+            "errors": len(self.errors()),
+            "warnings": len(self.warnings()),
+            "rules_run": self.rules_run,
+            "rules_skipped": self.rules_skipped,
+            "findings": [f.as_dict() for f in self.findings],
+        }
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.as_dict(), default=str, **kw)
+
+    def summary_lines(self) -> list[str]:
+        lines = [
+            f"[{self.target}] {len(self.rules_run)} rules run, "
+            f"{len(self.rules_skipped)} skipped, "
+            f"{len(self.errors())} error(s), {len(self.warnings())} warning(s)"
+        ]
+        for f in self.findings:
+            if f.severity == "info":
+                continue
+            lines.append(f"  {f.severity.upper()} {f.rule} @ {f.location}: {f.message}")
+        return lines
+
+
+def _load_rules() -> None:
+    """Import the rule modules so their ``@rule`` decorators register.
+
+    Deferred to avoid import cycles (rules import jax / repro.kernels,
+    which never import us back at module level, but keeping registration
+    lazy also keeps ``from repro.analysis import count_primitives`` light).
+    """
+    from repro.analysis import (  # noqa: F401
+        rules_dtype,
+        rules_hlo,
+        rules_pairing,
+        rules_schedule,
+        rules_vmem,
+    )
+
+
+def run_rules(
+    ctx: RuleContext, rule_ids: Iterable[str] | None = None
+) -> AnalysisReport:
+    """Run every registered rule (or the given subset) against ``ctx``.
+
+    Rules whose ``needs`` the context can't satisfy are recorded in
+    ``rules_skipped`` with the first unmet need — never silently dropped.
+    """
+    _load_rules()
+
+    wanted = set(rule_ids) if rule_ids is not None else None
+    if wanted is not None:
+        unknown = wanted - set(RULE_REGISTRY)
+        assert not unknown, f"unknown rule ids: {sorted(unknown)}"
+
+    findings: list[Finding] = []
+    rules_run: list[str] = []
+    skipped: dict[str, str] = {}
+    for rid in sorted(RULE_REGISTRY):
+        if wanted is not None and rid not in wanted:
+            continue
+        r = RULE_REGISTRY[rid]
+        unmet = next((n for n in r.needs if not ctx.has(n)), None)
+        if unmet is not None:
+            skipped[rid] = unmet
+            continue
+        findings.extend(r.fn(ctx))
+        rules_run.append(rid)
+    return AnalysisReport(
+        target=ctx.target,
+        findings=findings,
+        rules_run=rules_run,
+        rules_skipped=skipped,
+    )

@@ -1,0 +1,115 @@
+"""The repo's single jaxpr-walking implementation.
+
+Every traced-program audit (the fig8 schedule gates, the residual-add audit,
+the analysis rules in this package) walks jaxprs through here — there must be
+exactly one definition of "what counts as an eqn of the program".
+
+Semantics: the walk visits eqns **per call site**.  A sub-jaxpr referenced
+from two *different* eqns (e.g. one jitted function called twice → two pjit
+eqns sharing one ClosedJaxpr object) is walked once per eqn, because each
+call site executes the computation again — `count_primitives("pallas_call")`
+must count kernel launches, not distinct kernel definitions.  Within a
+*single* eqn, however, the same sub-jaxpr object referenced from two params
+is walked exactly once: it is one computation, whatever bookkeeping the
+primitive keeps (the historical walker double-walked this case and inflated
+every count).
+"""
+from __future__ import annotations
+
+from collections.abc import Iterator, Sequence
+from typing import Any
+
+
+def _eqn_sub_jaxprs(eqn) -> Iterator[Any]:
+    """Distinct sub-jaxprs carried in one eqn's params.
+
+    Dedup is by identity of the *raw* jaxpr (a ClosedJaxpr and its ``.jaxpr``
+    are the same computation), scoped to this eqn — see module docstring.
+    """
+    seen: set[int] = set()
+    for v in eqn.params.values():
+        for s in v if isinstance(v, list | tuple) else [v]:
+            if hasattr(s, "jaxpr") or hasattr(s, "eqns"):
+                raw = getattr(s, "jaxpr", s)
+                if id(raw) in seen:
+                    continue
+                seen.add(id(raw))
+                yield s
+
+
+def walk_eqns_with_stack(jaxpr, _stack: tuple = ()) -> Iterator[tuple[Any, tuple]]:
+    """Yield ``(eqn, enclosing_eqns)`` for every eqn of a (closed) jaxpr.
+
+    ``enclosing_eqns`` is the tuple of eqns whose sub-jaxprs contain this one
+    (outermost first) — e.g. a ``pallas_call`` inside a decode ``scan`` body
+    carries that scan eqn on its stack, which is how the per-decode-layer
+    writeback rule attributes kernel launches to layers.
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn, _stack
+        for s in _eqn_sub_jaxprs(eqn):
+            yield from walk_eqns_with_stack(s, (*_stack, eqn))
+
+
+def walk_eqns(jaxpr) -> Iterator[Any]:
+    """Yield every eqn of a (closed) jaxpr, descending into call / custom-vjp
+    / scan / pallas sub-jaxprs carried in eqn params."""
+    for eqn, _ in walk_eqns_with_stack(jaxpr):
+        yield eqn
+
+
+def count_primitives(jaxpr, name: str) -> int:
+    """Count occurrences of a primitive across the whole traced program —
+    used to audit the fused conv path's schedule (e.g. ``reduce_window_max``
+    must be absent, ``pallas_call`` counts HBM writebacks of the conv
+    layers)."""
+    return sum(1 for eqn in walk_eqns(jaxpr) if eqn.primitive.name == name)
+
+
+def count_shape_adds(jaxpr, shape: Sequence[int]) -> int:
+    """Count ``add`` eqns whose output *and both operands* have ``shape``.
+
+    An ``add`` of two full hidden-state tensors is the signature of a
+    standalone residual add (``h + attn(x)`` / ``h + mlp(x)``) — bias adds
+    and norm arithmetic broadcast from lower-rank operands and never match.
+    Used to audit that the paired decode step executes its residual adds
+    inside the kernel epilogue instead.
+    """
+    shape = tuple(shape)
+
+    def is_resid_add(eqn):
+        if eqn.primitive.name != "add":
+            return False
+        avals = [getattr(v, "aval", None) for v in (*eqn.invars, *eqn.outvars)]
+        return all(getattr(a, "shape", None) == shape for a in avals)
+
+    return sum(1 for eqn in walk_eqns(jaxpr) if is_resid_add(eqn))
+
+
+def pallas_calls_by_scan(jaxpr) -> tuple[int, dict[int, dict]]:
+    """(total pallas_calls, {scan position: per-trip launch stats}).
+
+    For every ``scan`` eqn that encloses at least one ``pallas_call``, the
+    value records ``{"per_trip": launches inside one body execution,
+    "length": static trip count (layers)}``.  Launches are attributed to the
+    *innermost* enclosing scan; launches outside any scan are only in the
+    total.  The dict is keyed by an opaque per-scan integer (stable within
+    one walk) purely to keep distinct scans apart.
+    """
+    total = 0
+    per_scan: dict[int, dict] = {}
+    for eqn, stack in walk_eqns_with_stack(jaxpr):
+        if eqn.primitive.name != "pallas_call":
+            continue
+        total += 1
+        scans = [e for e in stack if e.primitive.name == "scan"]
+        if not scans:
+            continue
+        innermost = scans[-1]
+        rec = per_scan.setdefault(
+            id(innermost),
+            {"per_trip": 0, "length": int(innermost.params.get("length", 1))},
+        )
+        rec["per_trip"] += 1
+    return total, per_scan

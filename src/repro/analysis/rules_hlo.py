@@ -1,0 +1,90 @@
+"""Compiled-HLO rule: pairing metadata must stay put inside the decode loop.
+
+The stacked ``"<name>_pairing"`` index/mask arrays are loop-invariant decode
+state: the layer scan slices them per trip, and nothing else should touch
+them.  A ``copy`` or a collective (resharding) of a pairing buffer *inside*
+the while loop means the partitioner is moving the metadata every decode
+step — per-token traffic for buffers that never change.
+
+Anchoring: jax records the flattened argument path of every entry parameter
+in its HLO metadata (``op_name="p['segments'][0]['attn']['wq_pairing']['I']"``),
+so pairing buffers are identified by name at the ENTRY boundary and tracked
+into the loop by their exact array type (post-SPMD, a reshard/copy of one
+produces an op of the same — or sliced — pairing-metadata type; matching on
+the full type string keeps the rule conservative).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.core import Finding, RuleContext, rule
+from repro.parallel.hlo import _SHAPE_RE, parse_hlo, while_reachable
+
+# op kinds that move a buffer without computing anything new on it
+_MOVE_OPS = {
+    "copy", "copy-start", "all-gather", "all-gather-start", "all-to-all",
+    "collective-permute", "collective-permute-start", "all-reduce",
+    "all-reduce-start", "reduce-scatter",
+}
+
+_PAIRING_META_RE = re.compile(r"op_name=\"[^\"]*_pairing[^\"]*\"")
+
+
+def _canon_type(type_str: str) -> str:
+    """``f32[2,32,18]{2,1,0} `` → ``f32[2,32,18]`` (layout/space stripped)."""
+    m = _SHAPE_RE.search(type_str)
+    return m.group(0) if m else type_str.strip()
+
+
+@rule("hlo/pairing-resharding-in-loop", needs=("hlo",))
+def pairing_resharding_in_loop(ctx: RuleContext):
+    """No copies/reshards of ``*_pairing`` buffers inside the decode loop."""
+    comps, entry = parse_hlo(ctx.hlo_text)
+    pairing_types: set[str] = set()
+    n_buffers = 0
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.op == "parameter" and _PAIRING_META_RE.search(op.line):
+                n_buffers += 1
+                pairing_types.add(_canon_type(op.type_str))
+    if not pairing_types:
+        yield Finding(
+            rule="hlo/pairing-resharding-in-loop",
+            severity="info",
+            location=ctx.target,
+            message="no pairing-metadata buffers in the compiled program",
+            measured=0,
+            expected=None,
+        )
+        return
+
+    loop_comps = while_reachable(comps)
+    moved = 0
+    for name in sorted(loop_comps):
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            if op.op in _MOVE_OPS and _canon_type(op.type_str) in pairing_types:
+                moved += 1
+                yield Finding(
+                    rule="hlo/pairing-resharding-in-loop",
+                    severity="error",
+                    location=f"{ctx.target}/{name}",
+                    message=f"{op.op} of a pairing-metadata-typed buffer "
+                            f"({_canon_type(op.type_str)}) inside the decode "
+                            f"loop — loop-invariant metadata is being moved "
+                            f"per step",
+                    measured=op.op,
+                    expected="no copies/collectives of pairing buffers in-loop",
+                )
+    yield Finding(
+        rule="hlo/pairing-resharding-in-loop",
+        severity="info",
+        location=ctx.target,
+        message=f"{n_buffers} pairing buffer(s) tracked across "
+                f"{len(loop_comps)} loop-interior computation(s), "
+                f"{moved} moved",
+        measured=moved,
+        expected=0,
+    )

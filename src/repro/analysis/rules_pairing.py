@@ -1,0 +1,267 @@
+"""Pairing-artifact validation rules.
+
+The pairing artifacts are offline preprocessing outputs (numpy, built once)
+that the kernels then trust completely: a lane index list that is not a
+permutation silently drops or double-counts contraction lanes, padding whose
+mask doesn't zero it contracts garbage, and stacked metadata that disagrees
+with the weight stack it shadows desynchronizes the layer scan.  These rules
+validate the concrete artifacts — no trace required.
+
+Both artifact families are covered:
+
+* conv artifacts (``core.transform.build_conv_pairings`` →
+  ``{name: PairedLayer}``) via ``RuleContext.pairing_artifacts``;
+* LM stacked metadata (``core.transform.pair_lm_params`` → ``"<w>_pairing"``
+  sibling dicts in the param tree) via ``RuleContext.params``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.analysis.core import Finding, RuleContext, rule
+
+_META_KEYS = ("I", "J", "resid", "pair_mask", "resid_mask")
+
+
+@dataclasses.dataclass
+class _Artifact:
+    """One per-layer (or per-layer-per-block) lane structure to validate."""
+
+    location: str
+    K: int  # contraction length the lanes must cover
+    I: np.ndarray  # (P,) padded pair indices
+    J: np.ndarray  # (P,)
+    resid: np.ndarray  # (R,)
+    pair_mask: np.ndarray | None  # (P,) 1.0 real / 0.0 padding; None → unpadded
+    resid_mask: np.ndarray | None
+
+
+def _conv_artifacts(arts: dict) -> list[_Artifact]:
+    from repro.core.pairing import BlockedPairing, StructuredPairing
+
+    out = []
+    for name, layer in arts.items():
+        p = getattr(layer, "pairing", layer)
+        if isinstance(p, StructuredPairing):
+            out.append(_Artifact(
+                location=name, K=p.shape[0], I=p.I, J=p.J, resid=p.resid,
+                pair_mask=None, resid_mask=None,
+            ))
+        elif isinstance(p, BlockedPairing):
+            idx = p.index_arrays()
+            for b in range(p.n_blocks):
+                out.append(_Artifact(
+                    location=f"{name}/block{b}", K=p.shape[0],
+                    I=idx["I"][b], J=idx["J"][b], resid=idx["resid"][b],
+                    pair_mask=idx["pair_mask"][b],
+                    resid_mask=idx["resid_mask"][b],
+                ))
+    return out
+
+
+def _lm_metadata(params: Any) -> list[tuple[str, dict, np.ndarray]]:
+    """Every ``(path, meta dict, weight array)`` pairing-metadata pair."""
+    out = []
+    segments = params.get("segments", []) if isinstance(params, dict) else []
+    for si, seg in enumerate(segments):
+        for sub_name, sub in seg.items():
+            if not isinstance(sub, dict):
+                continue
+            for key, meta in sub.items():
+                if not key.endswith("_pairing") or not isinstance(meta, dict):
+                    continue
+                w_name = key[: -len("_pairing")]
+                if w_name not in sub:
+                    continue
+                path = f"segments[{si}].{sub_name}.{key}"
+                out.append((path, meta, np.asarray(sub[w_name])))
+    return out
+
+
+def _lm_artifacts(params: Any) -> list[_Artifact]:
+    from repro.core.transform import _lm_weight_matrix_shape
+
+    out = []
+    for path, meta, arr in _lm_metadata(params):
+        w_name = path.rsplit(".", 1)[-1][: -len("_pairing")]
+        K, _ = _lm_weight_matrix_shape(w_name, arr.shape[1:])
+        I = np.asarray(meta["I"])
+        J = np.asarray(meta["J"])
+        R = np.asarray(meta["resid"])
+        pm = np.asarray(meta["pair_mask"])
+        rm = np.asarray(meta["resid_mask"])
+        for layer in range(I.shape[0]):
+            if I.ndim == 3:  # blocked: (layers, blocks, Pmax)
+                for b in range(I.shape[1]):
+                    out.append(_Artifact(
+                        location=f"{path}[layer {layer}, block {b}]", K=K,
+                        I=I[layer, b], J=J[layer, b], resid=R[layer, b],
+                        pair_mask=pm[layer, b], resid_mask=rm[layer, b],
+                    ))
+            else:  # structured: (layers, Pmax)
+                out.append(_Artifact(
+                    location=f"{path}[layer {layer}]", K=K,
+                    I=I[layer], J=J[layer], resid=R[layer],
+                    pair_mask=pm[layer], resid_mask=rm[layer],
+                ))
+    return out
+
+
+def _all_artifacts(ctx: RuleContext) -> list[_Artifact]:
+    arts: list[_Artifact] = []
+    if ctx.pairing_artifacts:
+        arts.extend(_conv_artifacts(ctx.pairing_artifacts))
+    if ctx.params is not None:
+        arts.extend(_lm_artifacts(ctx.params))
+    return arts
+
+
+def _valid_lanes(a: _Artifact) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(I, J, resid) restricted to mask-valid entries."""
+    if a.pair_mask is None:
+        return a.I, a.J, a.resid
+    p = a.pair_mask > 0
+    r = a.resid_mask > 0
+    return a.I[p], a.J[p], a.resid[r]
+
+
+@rule("pairing/valid-permutation", needs=("pairing",))
+def valid_permutation(ctx: RuleContext):
+    """Per-block lane lists ``[I | J | resid]`` must permute ``range(K)``."""
+    arts = _all_artifacts(ctx)
+    bad = 0
+    for a in arts:
+        I, J, resid = _valid_lanes(a)
+        lanes = np.concatenate([np.ravel(I), np.ravel(J), np.ravel(resid)])
+        if lanes.size != a.K or not np.array_equal(np.sort(lanes), np.arange(a.K)):
+            bad += 1
+            yield Finding(
+                rule="pairing/valid-permutation",
+                severity="error",
+                location=a.location,
+                message=f"lane lists cover {lanes.size} lane(s) of K={a.K} and "
+                        f"are not a permutation — the kernel would drop or "
+                        f"double-count contraction lanes",
+                measured=sorted(np.ravel(lanes).tolist())[:8],
+                expected=f"permutation of range({a.K})",
+            )
+    yield Finding(
+        rule="pairing/valid-permutation",
+        severity="info",
+        location=ctx.target,
+        message=f"{len(arts) - bad}/{len(arts)} artifact blocks carry valid "
+                f"lane permutations",
+        measured=len(arts),
+        expected=None,
+    )
+
+
+@rule("pairing/padding-consistent", needs=("pairing",))
+def padding_consistent(ctx: RuleContext):
+    """Padded (Pmax, Rmax) metadata: masks are prefix-shaped 0/1, padded
+    lanes point at row 0, and I/J/mask shapes agree."""
+    arts = [a for a in _all_artifacts(ctx) if a.pair_mask is not None]
+    bad = 0
+    for a in arts:
+        problems = []
+        if a.I.shape != a.J.shape or a.I.shape != a.pair_mask.shape:
+            problems.append(
+                f"pair shapes disagree: I{a.I.shape} J{a.J.shape} "
+                f"mask{a.pair_mask.shape}"
+            )
+        if a.resid.shape != a.resid_mask.shape:
+            problems.append(
+                f"resid shapes disagree: resid{a.resid.shape} "
+                f"mask{a.resid_mask.shape}"
+            )
+        for mask, idxs, tag in (
+            (a.pair_mask, (a.I, a.J), "pair"),
+            (a.resid_mask, (a.resid,), "resid"),
+        ):
+            m = np.ravel(mask)
+            if not np.isin(m, (0.0, 1.0)).all():
+                problems.append(f"{tag}_mask is not 0/1")
+                continue
+            nz = np.flatnonzero(m)
+            if nz.size and (nz[-1] + 1 != nz.size):
+                problems.append(f"{tag}_mask is not a prefix of ones")
+            for idx in idxs:
+                if idx.shape == mask.shape and np.any(np.ravel(idx)[m == 0] != 0):
+                    problems.append(f"padded {tag} lanes do not point at row 0")
+                    break
+        if problems:
+            bad += 1
+            yield Finding(
+                rule="pairing/padding-consistent",
+                severity="error",
+                location=a.location,
+                message="; ".join(problems),
+                measured=problems,
+                expected="prefix 0/1 masks, zero-row padding, matching shapes",
+            )
+    yield Finding(
+        rule="pairing/padding-consistent",
+        severity="info",
+        location=ctx.target,
+        message=f"{len(arts) - bad}/{len(arts)} padded artifact blocks "
+                f"consistent",
+        measured=len(arts),
+        expected=None,
+    )
+
+
+@rule("pairing/stacked-shapes", needs=("pairing",))
+def stacked_shapes(ctx: RuleContext):
+    """Stacked ``(layers, …)`` LM metadata must agree with the weight stack
+    it shadows: same layer count, all indices inside the weight's K."""
+    if ctx.params is None:
+        return
+    from repro.core.transform import _lm_weight_matrix_shape
+
+    pairs = _lm_metadata(ctx.params)
+    bad = 0
+    for path, meta, arr in pairs:
+        w_name = path.rsplit(".", 1)[-1][: -len("_pairing")]
+        L = arr.shape[0]
+        K, _ = _lm_weight_matrix_shape(w_name, arr.shape[1:])
+        problems = []
+        missing = [k for k in _META_KEYS if k not in meta]
+        if missing:
+            problems.append(f"metadata keys missing: {missing}")
+        for k in _META_KEYS:
+            if k not in meta:
+                continue
+            m = np.asarray(meta[k])
+            if m.shape[0] != L:
+                problems.append(
+                    f"{k} stacks {m.shape[0]} layer(s), weight stacks {L}"
+                )
+            if k in ("I", "J", "resid") and m.size and (
+                m.min() < 0 or m.max() >= K
+            ):
+                problems.append(
+                    f"{k} indexes rows [{m.min()}, {m.max()}] outside the "
+                    f"weight's K={K}"
+                )
+        if problems:
+            bad += 1
+            yield Finding(
+                rule="pairing/stacked-shapes",
+                severity="error",
+                location=path,
+                message="; ".join(problems),
+                measured=problems,
+                expected=f"(layers={L}, …) index arrays into K={K}",
+            )
+    yield Finding(
+        rule="pairing/stacked-shapes",
+        severity="info",
+        location=ctx.target,
+        message=f"{len(pairs) - bad}/{len(pairs)} stacked metadata entries "
+                f"agree with their weights",
+        measured=len(pairs),
+        expected=None,
+    )

@@ -1,0 +1,142 @@
+"""Schedule rules: does the traced program execute the claimed fusion plan?
+
+The paper's power/area win is a *schedule* claim as much as an arithmetic
+one: the subtractions must run inside the kernel lanes, the pool and the
+residual adds must ride kernel epilogues, and each conv layer / decode GEMM
+must write back to HBM exactly once.  These rules read the traced jaxpr and
+compare it against the target's declared expectations.
+"""
+from __future__ import annotations
+
+from repro.analysis.core import Finding, RuleContext, rule
+from repro.analysis.jaxpr_walk import (
+    count_primitives,
+    count_shape_adds,
+    pallas_calls_by_scan,
+)
+
+
+@rule("schedule/no-standalone-pool", needs=("jaxpr",))
+def no_standalone_pool(ctx: RuleContext):
+    """Standalone ``reduce_window_max`` is forbidden on the fused conv→pool path."""
+    n = count_primitives(ctx.jaxpr, "reduce_window_max")
+    fused = bool(ctx.expect.get("fused_pool"))
+    if fused and n > 0:
+        yield Finding(
+            rule="schedule/no-standalone-pool",
+            severity="error",
+            location=ctx.target,
+            message=f"fused path still launches {n} standalone reduce_window_max "
+                    f"op(s) — pooling must happen inside the kernel epilogue",
+            measured=n,
+            expected=0,
+        )
+    else:
+        yield Finding(
+            rule="schedule/no-standalone-pool",
+            severity="info",
+            location=ctx.target,
+            message=f"{n} standalone reduce_window_max op(s) in the traced program",
+            measured=n,
+            expected=0 if fused else None,
+        )
+
+
+@rule("schedule/writebacks-per-program", needs=("jaxpr",))
+def writebacks_per_program(ctx: RuleContext):
+    """``pallas_call`` count per traced program — one HBM writeback per kernel."""
+    n = count_primitives(ctx.jaxpr, "pallas_call")
+    expected = ctx.expect.get("pallas_calls")
+    if expected is not None and n != expected:
+        yield Finding(
+            rule="schedule/writebacks-per-program",
+            severity="error",
+            location=ctx.target,
+            message=f"expected {expected} kernel writeback(s) in the traced "
+                    f"program, found {n}",
+            measured=n,
+            expected=expected,
+        )
+    else:
+        yield Finding(
+            rule="schedule/writebacks-per-program",
+            severity="info",
+            location=ctx.target,
+            message=f"{n} pallas_call writeback(s) in the traced program",
+            measured=n,
+            expected=expected,
+        )
+
+
+@rule("schedule/writebacks-per-decode-layer", needs=("jaxpr",))
+def writebacks_per_decode_layer(ctx: RuleContext):
+    """HBM writebacks per decode layer: ``pallas_call`` launches inside one
+    trip of each layer ``scan`` body — the ROADMAP prerequisite for gating
+    the paired flash-attention reduction."""
+    total, per_scan = pallas_calls_by_scan(ctx.jaxpr)
+    expected = ctx.expect.get("writebacks_per_layer")
+    if not per_scan:
+        sev = "error" if expected is not None else "info"
+        yield Finding(
+            rule="schedule/writebacks-per-decode-layer",
+            severity=sev,
+            location=ctx.target,
+            message="no scan encloses a pallas_call"
+                    + (" (expected a layer loop with kernel launches)"
+                       if expected is not None else ""),
+            measured=0,
+            expected=expected,
+        )
+        return
+    for i, rec in enumerate(sorted(per_scan.values(), key=lambda r: -r["per_trip"])):
+        loc = f"{ctx.target}/scan{i}"
+        if expected is not None and rec["per_trip"] > expected:
+            yield Finding(
+                rule="schedule/writebacks-per-decode-layer",
+                severity="error",
+                location=loc,
+                message=f"{rec['per_trip']} kernel writebacks per decode layer "
+                        f"(scan over {rec['length']} layers) exceeds the "
+                        f"budget of {expected}",
+                measured=rec["per_trip"],
+                expected=expected,
+            )
+        else:
+            yield Finding(
+                rule="schedule/writebacks-per-decode-layer",
+                severity="info",
+                location=loc,
+                message=f"{rec['per_trip']} kernel writeback(s) per layer across "
+                        f"a scan of {rec['length']} layer(s)",
+                measured=rec["per_trip"],
+                expected=expected,
+            )
+
+
+@rule("schedule/standalone-residual-adds", needs=("jaxpr", "hidden_shape"))
+def standalone_residual_adds(ctx: RuleContext):
+    """Standalone hidden-state residual adds — the paired path must fuse the
+    ``h + attn(x)`` / ``h + mlp(x)`` skips into the kernel epilogue."""
+    n = count_shape_adds(ctx.jaxpr, ctx.hidden_shape)
+    expected = ctx.expect.get("residual_adds")
+    if expected is not None and n != expected:
+        yield Finding(
+            rule="schedule/standalone-residual-adds",
+            severity="error",
+            location=ctx.target,
+            message=f"{n} standalone residual add(s) over hidden shape "
+                    f"{tuple(ctx.hidden_shape)} (expected {expected}) — skips "
+                    f"must ride the kernel's residual-add epilogue",
+            measured=n,
+            expected=expected,
+        )
+    else:
+        yield Finding(
+            rule="schedule/standalone-residual-adds",
+            severity="info",
+            location=ctx.target,
+            message=f"{n} standalone residual add(s) over hidden shape "
+                    f"{tuple(ctx.hidden_shape)}",
+            measured=n,
+            expected=expected,
+        )

@@ -1,0 +1,160 @@
+"""Analysis targets: build the :class:`RuleContext` each CLI target exposes.
+
+Each target traces (and where useful, compiles) one real inference path with
+the same policy plumbing the benches and the serving engine use, then
+declares what the schedule *must* look like — the expectations the error
+rules gate on.  Weights are fresh inits: every shipped rule checks structure
+(schedule, dtypes, block specs, index validity), none of which depends on
+trained values, so the CLI stays fast enough for a CI job.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+
+from repro.analysis.core import RuleContext
+
+TARGETS = ("lenet_fused", "lm_decode", "serve_step")
+
+# paired decode routes exactly the LM_PAIRED_WEIGHTS GEMMs (attention
+# q/k/v/out + MLP gate/up/down) through the subtractor kernel — one HBM
+# writeback each per layer
+_DECODE_WRITEBACKS_PER_LAYER = 7
+
+
+def _paired_knobs():
+    from repro.models import lm as M
+
+    return M.PerfKnobs(
+        q_chunk=16, k_chunk=16, remat="none",
+        gemm="pallas_paired", pair_block_n=1, pair_rounding=0.05,
+    )
+
+
+def _smoke_lm_cfg():
+    from repro.configs import get_smoke_config
+
+    # fp32 keeps the target aligned with the parity benches (the bf16
+    # subtractor dtype rule is exercised by the test suite's bf16 kernels)
+    return dc.replace(get_smoke_config("qwen2-1.5b"), dtype="float32")
+
+
+def _paired_lm_pieces():
+    """(cfg, paired params, cache, tokens, pos, knobs) shared by the two LM
+    targets."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.transform import pair_lm_params
+    from repro.models import lm as M
+    from repro.models.param import unzip
+
+    cfg = _smoke_lm_cfg()
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    pm, _ = pair_lm_params(params, 0.05, mode="per_column")
+    cache, _ = unzip(M.init_cache(cfg, 2, 32))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray([5, 11], jnp.int32)
+    return cfg, pm, cache, tok, pos, _paired_knobs()
+
+
+def build_lenet_fused() -> RuleContext:
+    """Fused conv→pool LeNet forward on the paired Pallas path."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.transform import build_conv_pairings
+    from repro.models.lenet import LENET_CONV_POSITIONS, init_lenet, lenet_apply
+
+    params = init_lenet(jax.random.key(0))
+    arts = build_conv_pairings(params, 0.0, positions=LENET_CONV_POSITIONS)
+    x = jnp.zeros((4, 32, 32, 1), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda p, xb: lenet_apply(
+            p, xb, conv_impl="pallas_paired", paired=arts, fuse_pool=True
+        )
+    )(params, x)
+    return RuleContext(
+        target="lenet_fused",
+        jaxpr=jaxpr,
+        pairing_artifacts=arts,
+        expect={
+            "fused_pool": True,
+            # one megakernel writeback per conv layer, nothing else
+            "pallas_calls": len(arts),
+        },
+    )
+
+
+def build_lm_decode() -> RuleContext:
+    """Single-host paired LM decode step (the ServeEngine path)."""
+    import jax
+
+    from repro.kernels.ops import perf_context
+    from repro.models import lm as M
+
+    cfg, pm, cache, tok, pos, knobs = _paired_lm_pieces()
+
+    def step(p, c, t, s):
+        with perf_context(knobs):
+            return M.decode_step(cfg, p, c, t, s)
+
+    with perf_context(knobs):
+        jaxpr = jax.make_jaxpr(
+            lambda p, c, t, s: M.decode_step(cfg, p, c, t, s)
+        )(pm, cache, tok, pos)
+    hlo = jax.jit(step).lower(pm, cache, tok, pos).compile().as_text()
+    return RuleContext(
+        target="lm_decode",
+        jaxpr=jaxpr,
+        hlo_text=hlo,
+        params=pm,
+        hidden_shape=(2, 1, cfg.d_model),
+        expect={
+            "residual_adds": 0,
+            "writebacks_per_layer": _DECODE_WRITEBACKS_PER_LAYER,
+            "pallas_calls": _DECODE_WRITEBACKS_PER_LAYER,  # all inside the scan
+        },
+    )
+
+
+def build_serve_step() -> RuleContext:
+    """The pjit'd distributed serve step (mesh + sharding rules active)."""
+    import jax
+
+    from repro.launch.steps import build_serve_step as make_step
+    from repro.parallel.rules import rules_for
+    from repro.parallel.sharding import make_mesh_compat, set_mesh_compat
+
+    cfg, pm, cache, tok, pos, knobs = _paired_lm_pieces()
+    mesh = make_mesh_compat((1, jax.device_count()), ("data", "model"))
+    rules = rules_for(cfg, "decode", mesh)
+    step = make_step(cfg, mesh, rules, knobs)
+    batch = {"tokens": tok, "pos": pos}
+    with set_mesh_compat(mesh):
+        jaxpr = jax.make_jaxpr(step)(pm, cache, batch)
+        hlo = jax.jit(step).lower(pm, cache, batch).compile().as_text()
+    return RuleContext(
+        target="serve_step",
+        jaxpr=jaxpr,
+        hlo_text=hlo,
+        params=pm,
+        hidden_shape=(2, 1, cfg.d_model),
+        expect={
+            "residual_adds": 0,
+            "writebacks_per_layer": _DECODE_WRITEBACKS_PER_LAYER,
+            "pallas_calls": _DECODE_WRITEBACKS_PER_LAYER,
+        },
+    )
+
+
+_BUILDERS = {
+    "lenet_fused": build_lenet_fused,
+    "lm_decode": build_lm_decode,
+    "serve_step": build_serve_step,
+}
+
+
+def build_context(target: str) -> RuleContext:
+    if target not in _BUILDERS:
+        raise ValueError(f"unknown target {target!r}; choose from {TARGETS}")
+    return _BUILDERS[target]()

@@ -38,7 +38,7 @@ paper ("the weights preprocessing occurs once before deploying the weights").
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -575,7 +575,7 @@ def sweep_rounding(
     rows = []
     for r in roundings:
         mults = adds = subs = 0
-        for Wm, pos in zip(weights, positions):
+        for Wm, pos in zip(weights, positions, strict=True):
             cp = pair_columns(Wm, r)
             c = pairing_op_counts(Wm.size, cp.total_pairs, pos)
             mults += c["mults"]

@@ -17,7 +17,8 @@ For the TPU fast path (structured pairing + Pallas kernel) use
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import numpy as np
@@ -266,13 +267,12 @@ def _stack_blocked(pairings: list[BlockedPairing]) -> dict[str, np.ndarray]:
 
 def has_lm_pairing(params: Any) -> bool:
     """True iff ``params`` already carries pair_lm_params metadata."""
-    for seg in params.get("segments", []) if isinstance(params, dict) else []:
-        for sub in seg.values():
-            if isinstance(sub, dict) and any(
-                k.endswith("_pairing") for k in sub
-            ):
-                return True
-    return False
+    segments = params.get("segments", []) if isinstance(params, dict) else []
+    return any(
+        isinstance(sub, dict) and any(k.endswith("_pairing") for k in sub)
+        for seg in segments
+        for sub in seg.values()
+    )
 
 
 def pair_lm_params(
@@ -399,7 +399,7 @@ def pair_model_params(
     leaves_report: list[LeafReport] = []
 
     def handle(path, leaf):
-        if not isinstance(leaf, (np.ndarray, jax.Array)):
+        if not isinstance(leaf, np.ndarray | jax.Array):
             return leaf
         arr = np.asarray(leaf)
         if arr.dtype.kind != "f" or arr.ndim not in (2, 4):

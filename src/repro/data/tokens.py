@@ -13,7 +13,7 @@ the stream it needs from the step counter alone.
 """
 from __future__ import annotations
 
-from typing import Iterator
+from collections.abc import Iterator
 
 import numpy as np
 

@@ -257,10 +257,7 @@ def paired_conv(
     def fwd_kernel(x, w, bias):
         patches = im2col(x, kh, kw, stride=stride, padding=padding)
         wm = w.reshape(K, cout)
-        if blocked:
-            kmat, w_res = _blocked_live_segments(wm, sp, idx)
-        else:
-            kmat, w_res = _live_segments(wm, sp)
+        kmat, w_res = _blocked_live_segments(wm, sp, idx) if blocked else _live_segments(wm, sp)
         kmat, w_res = kmat.astype(x.dtype), w_res.astype(x.dtype)
         if pool != "none":
             xw, (n, poh, pow_) = _window_major(patches)

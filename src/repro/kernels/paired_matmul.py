@@ -110,7 +110,7 @@ that is how the kernel is validated in this container (TPU is the target).
 """
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -350,9 +350,19 @@ def _build_paired_call(
                 dimension_semantics=("parallel", "parallel", "arbitrary")
             )
 
+    # name the kernel by its segments: profiles (and the dtype analysis rule,
+    # which pins reduce_precision on low-precision *subtractor* kernels) key
+    # on "paired" meaning the kernel actually executes x[I]-x[J] lanes
+    name = "paired_matmul" if has_pairs else "dense_matmul"
+    if blocked:
+        name += "_blocked"
+    if has_pool:
+        name += "_pool"
+
     acc_shape = (W, bm, bn) if has_pool else (bm, bn)
     return pl.pallas_call(
         kernel,
+        name=name,
         grid=(Mp // bm, n_blocks if blocked else Np // bn, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),

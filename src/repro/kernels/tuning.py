@@ -29,6 +29,7 @@ VMEM model and real hardware behaviour.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import threading
@@ -88,6 +89,37 @@ def kernel_vmem_bytes(
     streams = pool_window * x_streams + w_streams
     fixed = pool_window * bm * bn * 4 + bm * bn * dtype_bytes  # acc + out
     return buf * streams * dtype_bytes + fixed
+
+
+def estimate_pallas_vmem_bytes(
+    in_blocks,
+    out_blocks,
+    scratch_blocks=(),
+    *,
+    double_buffer: bool = True,
+) -> int:
+    """Static VMEM working set of one ``pallas_call`` program from its block specs.
+
+    The generic counterpart of :func:`kernel_vmem_bytes` (which models the
+    paired kernel's named streams): each argument is an iterable of
+    ``(block_shape, dtype_bytes)``.  Streamed inputs are double-buffered,
+    outputs and scratch are resident once.  ``None`` entries in a block shape
+    (squeezed grid dims) occupy one element.  This is what the static
+    analysis pass charges against :data:`VMEM_BUDGET_BYTES` before anything
+    runs.
+    """
+
+    def tile(shape, nbytes) -> int:
+        n = 1
+        for d in shape:
+            n *= int(d) if d is not None else 1
+        return n * nbytes
+
+    buf = 2 if double_buffer else 1
+    total = sum(buf * tile(s, b) for s, b in in_blocks)
+    total += sum(tile(s, b) for s, b in out_blocks)
+    total += sum(tile(s, b) for s, b in scratch_blocks)
+    return total
 
 
 def _round_up_pow2(x: int, cap: int) -> int:
@@ -350,12 +382,10 @@ def measure(fn, *, reps: int = 3, warmup: int = 1) -> float:
     numbers arriving the moment the same sweep runs on a TPU.
     """
     def _block(out):
-        try:
+        with contextlib.suppress(ImportError, TypeError):
             import jax
 
             jax.block_until_ready(out)
-        except (ImportError, TypeError):
-            pass
         return out
 
     for _ in range(warmup):
@@ -447,7 +477,7 @@ def autotune_blocks(
     best: TileConfig | None = None
     best_t = float("inf")
     for cfg in cands:
-        t = measure(lambda: runner(cfg), reps=reps, warmup=warmup)
+        t = measure(lambda cfg=cfg: runner(cfg), reps=reps, warmup=warmup)
         records.append(
             {
                 **cfg.as_dict(),

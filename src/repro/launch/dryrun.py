@@ -51,11 +51,13 @@ def run_cell(
     arch: str,
     shape_name: str,
     multi_pod: bool,
-    knobs: PerfKnobs = PerfKnobs(),
+    knobs: PerfKnobs | None = None,
     *,
     save: bool = True,
     tag: str = "",
 ) -> dict:
+    if knobs is None:
+        knobs = PerfKnobs()
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -98,6 +100,16 @@ def run_cell(
             hc.hbm_bytes += attn_bytes
         coll = hc.collective
 
+        # pairing buffers are loop-invariant decode state — lint the compiled
+        # HLO for reshards/copies of them inside the while loop (error-severity
+        # findings make the cell record visibly dirty without failing the run)
+        from repro.analysis import RuleContext, run_rules
+
+        lint = run_rules(
+            RuleContext(target=cell_id, hlo_text=hlo),
+            rule_ids=("hlo/pairing-resharding-in-loop",),
+        )
+
         n_chips = mesh.devices.size
         out = {
             "cell": cell_id,
@@ -127,6 +139,10 @@ def run_cell(
                 "xla_bytes_unscaled": cost.get("bytes accessed", 0.0),
             },
             "collectives": coll,
+            "analysis": {
+                "errors": len(lint.errors()),
+                "findings": [f.as_dict() for f in lint.findings],
+            },
             "model": {
                 "params": cfg.param_count(),
                 "params_active": cfg.param_count(active_only=True),

@@ -502,7 +502,7 @@ def lm_forward(
     caches = []
     aux_total = jnp.float32(0.0)
 
-    for (kind, _), seg_params in zip(kinds, params["segments"]):
+    for (kind, _), seg_params in zip(kinds, params["segments"], strict=True):
 
         def body(carry, lp, _kind=kind):
             h, aux = carry
@@ -535,7 +535,7 @@ def _hidden_for_loss(
         params = _precast_segments(cfg, params)
     h, positions, enc_out, offset = _prepare_inputs(cfg, params, batch, knobs)
     aux_total = jnp.float32(0.0)
-    for (kind, _), seg_params in zip(segment_kinds(cfg), params["segments"]):
+    for (kind, _), seg_params in zip(segment_kinds(cfg), params["segments"], strict=True):
 
         def body(carry, lp, _kind=kind):
             h, aux = carry
@@ -774,7 +774,7 @@ def decode_step(
 
     new_segs = []
     for (kind, _), seg_params, seg_cache in zip(
-        segment_kinds(cfg), params["segments"], cache["segments"]
+        segment_kinds(cfg), params["segments"], cache["segments"], strict=True
     ):
 
         def body(h, xs, _kind=kind):
@@ -813,7 +813,7 @@ def prefill(
         cdt = jnp.dtype(cfg.dtype)
         enc_out = encoder_fwd(cfg, params["encoder"], batch["frames"].astype(cdt), knobs)
         for (kind, _), seg_params, entry in zip(
-            segment_kinds(cfg), params["segments"], cache["segments"]
+            segment_kinds(cfg), params["segments"], cache["segments"], strict=True
         ):
             if kind != "encdec":
                 continue

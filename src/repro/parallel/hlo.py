@@ -146,6 +146,36 @@ def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
     return comps, entry
 
 
+def while_reachable(comps: dict[str, Computation]) -> set[str]:
+    """Names of computations that execute inside some ``while`` loop.
+
+    Seeds from every while op's body/condition and follows the full call
+    graph (fusions, to_apply appliers, calls, conditional branches) — the
+    "decode loop interior" the static-analysis HLO rules scan for stray
+    copies/reshards of loop-invariant buffers.
+    """
+    roots: list[str] = []
+    callees: dict[str, list[str]] = defaultdict(list)
+    for comp in comps.values():
+        for op in comp.ops:
+            targets = [t for _, t in _CALL_RE.findall(op.line)]
+            m = _BRANCH_RE.search(op.line)
+            if m:
+                targets.extend(re.findall(r"%?([\w.\-]+)", m.group(1)))
+            callees[comp.name].extend(targets)
+            if op.op == "while":
+                roots.extend(targets)
+    reachable: set[str] = set()
+    stack = roots
+    while stack:
+        name = stack.pop()
+        if name in reachable:
+            continue
+        reachable.add(name)
+        stack.extend(callees.get(name, []))
+    return reachable
+
+
 def _trip_count(cond: Computation | None, while_line: str) -> int:
     m = _TRIPS_KNOWN_RE.search(while_line)
     if m:
@@ -180,7 +210,7 @@ def xla_cost_analysis(compiled) -> dict:
     leaks.
     """
     cost = compiled.cost_analysis() if hasattr(compiled, "cost_analysis") else compiled
-    if isinstance(cost, (list, tuple)):
+    if isinstance(cost, list | tuple):
         cost = cost[0] if cost else {}
     return dict(cost) if cost else {}
 

@@ -23,7 +23,8 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Any, Mapping, Sequence
+from collections.abc import Mapping, Sequence
+from typing import Any
 
 import jax
 import numpy as np
@@ -43,12 +44,11 @@ def make_mesh_compat(axis_shapes, axis_names, *, explicit: bool = False) -> Mesh
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None and hasattr(jax, "make_mesh"):
         kind = axis_type.Explicit if explicit else axis_type.Auto
-        try:
+        # make_mesh may predate axis_types — fall through on TypeError
+        with contextlib.suppress(TypeError):
             return jax.make_mesh(
                 axis_shapes, axis_names, axis_types=(kind,) * len(axis_names)
             )
-        except TypeError:  # make_mesh predates axis_types
-            pass
     if hasattr(jax, "make_mesh"):
         return jax.make_mesh(axis_shapes, axis_names)
     n = int(np.prod(axis_shapes))
@@ -200,7 +200,7 @@ def shardings_for(axes_tree: Any, mesh: Mesh, rules: Rules, shapes_tree: Any = N
         spec = spec_for_axes(axes, mesh=mesh, rules=rules, dim_sizes=dims)
         return NamedSharding(mesh, spec)
 
-    is_axes = lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a)
+    is_axes = lambda a: isinstance(a, tuple) and all(isinstance(x, str | None) for x in a)
     if shapes_tree is None:
         return jax.tree.map(one, axes_tree, is_leaf=is_axes)
     return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)

@@ -12,7 +12,7 @@ reuses exactly these step functions through ``launch/steps.build_serve_step``
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +109,7 @@ class ServeEngine:
         self.cache = {
             "segments": [
                 splice(d, s)
-                for d, s in zip(self.cache["segments"], cache["segments"])
+                for d, s in zip(self.cache["segments"], cache["segments"], strict=True)
             ]
         }
         self.pos = self.pos.at[slot].set(plen)
@@ -122,10 +122,7 @@ class ServeEngine:
         """One decode step for every active slot. Returns (batch,) next tokens."""
         logits, self.cache = self._decode(self.params, self.cache, self.tokens, self.pos)
         logits = logits[:, 0, : self.cfg.vocab]
-        if sample is None:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            nxt = sample(logits)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32) if sample is None else sample(logits)
         self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
         self.tokens = nxt[:, None]
         return np.asarray(nxt)

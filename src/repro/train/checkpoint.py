@@ -118,6 +118,6 @@ def restore_checkpoint(
             f"checkpoint has {len(arrays)} leaves, target tree {len(flat_like)}"
         )
     restored = [
-        np.asarray(a, dtype=np.asarray(l).dtype) for a, l in zip(arrays, flat_like)
+        np.asarray(a, dtype=np.asarray(l).dtype) for a, l in zip(arrays, flat_like, strict=True)
     ]
     return jax.tree_util.tree_unflatten(treedef, restored), manifest["metadata"]

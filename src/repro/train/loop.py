@@ -7,7 +7,8 @@ resume-from-latest (fault tolerance is exercised by tests/test_checkpoint.py).
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Iterable
+from collections.abc import Callable, Iterable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

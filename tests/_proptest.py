@@ -21,7 +21,7 @@ printed in the test id.
 from __future__ import annotations
 
 import zlib
-from typing import Callable
+from collections.abc import Callable
 
 import numpy as np
 import pytest

@@ -186,7 +186,7 @@ def test_fused_pool_grad_parity(pool):
 
     g_fused = jax.grad(loss_fused, argnums=(0, 1, 2))(x, w, b)
     g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
-    for a, r in zip(g_fused, g_ref):
+    for a, r in zip(g_fused, g_ref, strict=True):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4
         )
@@ -265,7 +265,7 @@ def test_lenet_fused_pool_grad():
         g = jax.jit(
             jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean())
         )(params)
-    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g)):
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g), strict=True):
         np.testing.assert_allclose(
             np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4
         )
@@ -332,7 +332,7 @@ def test_blocked_lenet_fused_pool_schedule_and_grad():
         g = jax.jit(
             jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean())
         )(params)
-    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g)):
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g), strict=True):
         np.testing.assert_allclose(
             np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4
         )

@@ -75,7 +75,7 @@ def test_batches_deterministic():
     b1 = list(batches(x, y, 32, seed=3))
     b2 = list(batches(x, y, 32, seed=3))
     assert len(b1) == 3
-    for (xa, ya), (xb, yb) in zip(b1, b2):
+    for (xa, ya), (xb, yb) in zip(b1, b2, strict=True):
         np.testing.assert_array_equal(xa, xb)
         np.testing.assert_array_equal(ya, yb)
 
@@ -122,10 +122,10 @@ def test_pair_model_params_on_lenet():
     assert any("fc1" in n for n in names)
     # same treedef, same shapes
     assert jax.tree.structure(paired) == jax.tree.structure(params)
-    for a, b in zip(jax.tree.leaves(paired), jax.tree.leaves(params)):
+    for a, b in zip(jax.tree.leaves(paired), jax.tree.leaves(params), strict=True):
         assert a.shape == b.shape and a.dtype == b.dtype
     # error bound
-    for la, lb in zip(jax.tree.leaves(paired), jax.tree.leaves(params)):
+    for la, lb in zip(jax.tree.leaves(paired), jax.tree.leaves(params), strict=True):
         assert float(jnp.max(jnp.abs(jnp.asarray(la, jnp.float64) - jnp.asarray(lb, jnp.float64)))) <= 0.025 + 1e-9
     s = report.savings()
     assert 0 <= s["power_saving"] < 1

@@ -50,10 +50,7 @@ def _layer_weight_matrices(params):
         if sub not in seg or name not in seg[sub]:
             continue
         w = jnp.asarray(seg[sub][name][0], jnp.float32)  # layer 0
-        if name == "wo":
-            out[(sub, name)] = w.reshape(-1, w.shape[-1])
-        else:
-            out[(sub, name)] = w.reshape(w.shape[0], -1)
+        out[(sub, name)] = w.reshape(-1, w.shape[-1]) if name == "wo" else w.reshape(w.shape[0], -1)
     return out
 
 

@@ -225,13 +225,13 @@ def test_conv_impl_dispatch_under_grad():
     g_col = jax.grad(loss)(params, "im2col")
     g_pal = jax.grad(loss)(params, "pallas_paired", arts0)
     for ref, got in ((g_xla, g_col), (g_xla, g_pal)):
-        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got), strict=True):
             np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4)
 
     # policy form, under jit + grad (the serving/training route)
     with pallas_conv(paired=arts0):
         g_pol = jax.jit(jax.grad(lambda p: (lenet_apply(p, x) ** 2).mean()))(params)
-    for a, b in zip(jax.tree.leaves(g_xla), jax.tree.leaves(g_pol)):
+    for a, b in zip(jax.tree.leaves(g_xla), jax.tree.leaves(g_pol), strict=True):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4)
 
     # rounding > 0: grads flow through the frozen pairing structure
@@ -352,7 +352,7 @@ def test_blocked_lenet_under_jit_grad():
             ).mean()
         )
     )(params)
-    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_blk)):
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_blk), strict=True):
         np.testing.assert_allclose(
             np.asarray(b), np.asarray(a), rtol=1e-3, atol=1e-4
         )

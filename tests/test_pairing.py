@@ -31,7 +31,7 @@ def test_exact_opposites_pair_fully():
     # pair magnitudes are the common |value|
     assert sorted(res.pair_mag.tolist()) == [0.25, 0.5, 1.0]
     # each pair is (positive index, negative index)
-    for i, j in zip(res.pair_pos, res.pair_neg):
+    for i, j in zip(res.pair_pos, res.pair_neg, strict=True):
         assert w[i] > 0 and w[j] < 0
         assert abs(w[i] + w[j]) < 1e-12
 
@@ -272,11 +272,12 @@ def test_blocked_at_block_1_is_per_column(k, n, rounding, seed):
     assert bp.n_blocks == n
     for col, sp in enumerate(bp.blocks):
         assert sp.n_pairs == cp.n_pairs[col], col
-        got = sorted(zip(sp.I.tolist(), sp.J.tolist()))
+        got = sorted(zip(sp.I.tolist(), sp.J.tolist(), strict=True))
         want = sorted(
             zip(
                 cp.pair_pos[: cp.n_pairs[col], col].tolist(),
                 cp.pair_neg[: cp.n_pairs[col], col].tolist(),
+                strict=True,
             )
         )
         assert got == want, col

@@ -91,7 +91,7 @@ def test_pairing_mode_spectrum_ordered(trained_lenet):
         ladder.append(
             sum(pair_columns(m, r).total_pairs for _, m, _ in mats)
         )
-        assert all(a <= b for a, b in zip(ladder, ladder[1:])), (r, ladder)
+        assert all(a <= b for a, b in zip(ladder, ladder[1:], strict=False)), (r, ladder)
 
 
 def test_blocked_1_ledger_is_the_analytic_ledger(trained_lenet):
