@@ -1,0 +1,159 @@
+"""Model-zoo pairing sweep: every assigned config family through the paired
+path.
+
+For each of the ten architecture families (dense / MoE / MLA / SSM / hybrid /
+enc-dec / VLM) at toy scale:
+
+1. **r=0 parity** — full ``lm_forward`` under
+   ``PerfKnobs(gemm="pallas_paired", conv="pallas_paired")`` on a
+   ``pair_params(params, 0.0)`` tree must match the plain XLA forward to
+   ≤ 1e-5 relative error (fp32).  At rounding 0 the pairing criterion admits
+   no pairs, every lane lands in the residual GEMM, and the subtractor
+   kernel must reproduce the exact matmul — the correctness anchor for the
+   whole spectrum.
+2. **r=0.05 pairing-rate ledger** — per-column pairing at the paper's
+   working rounding, reported per leaf and per family, asserting a nonzero
+   rate everywhere including at least one MoE *expert* einsum (the
+   stacked-expert-axis metadata `olmoe`/`deepseek` used to fall back from).
+
+CI runs one family per matrix leg (``--family``) and merges the
+``BENCH_model_zoo.json`` summaries into a single artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, write_result
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.transform import pair_params
+from repro.kernels.ops import perf_context
+from repro.launch.inputs import make_batch
+from repro.models import lm as M
+from repro.models.param import unzip
+
+B, S = 2, 16
+QUICK_FAMILIES = ("qwen2-1.5b", "olmoe-1b-7b")  # dense + MoE cover both kernels
+
+_BASE = dict(q_chunk=8, k_chunk=8, remat="none")
+KNOBS_XLA = M.PerfKnobs(**_BASE)
+KNOBS_PAIRED = M.PerfKnobs(**_BASE, gemm="pallas_paired", conv="pallas_paired")
+
+PARITY_TOL = 1e-5
+LEDGER_ROUNDING = 0.05
+
+
+def _is_expert_leaf(path: str) -> bool:
+    return ".moe." in path and ".moe.shared." not in path
+
+
+def _run_family(arch: str) -> dict:
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    batch = make_batch(cfg, B, S, "prefill")
+
+    # -- r=0 parity: paired kernel path vs XLA einsum path -------------------
+    paired0, rep0 = pair_params(
+        params, 0.0, mode="structured", leaves=cfg.paired_leaves or None
+    )
+    want, _, _ = M.lm_forward(cfg, params, batch, knobs=KNOBS_XLA)
+    with perf_context(KNOBS_PAIRED):
+        got, _, _ = jax.jit(
+            lambda p: M.lm_forward(cfg, p, batch, knobs=KNOBS_PAIRED)
+        )(paired0)
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+
+    # -- r=0.05 per-column pairing-rate ledger -------------------------------
+    _, rep = pair_params(
+        params, LEDGER_ROUNDING, mode="per_column",
+        leaves=cfg.paired_leaves or None,
+    )
+    leaves = [
+        {
+            "path": lf.path,
+            "shape": list(lf.shape),
+            "pair_fraction": lf.pair_fraction,
+            "is_expert": _is_expert_leaf(lf.path),
+        }
+        for lf in rep.leaves
+    ]
+    expert_fracs = [l["pair_fraction"] for l in leaves if l["is_expert"]]
+    return {
+        "family": cfg.family,
+        "parity_rel_err": rel,
+        "parity_ok": rel <= PARITY_TOL,
+        "pair_fraction_r005": rep.pair_fraction,
+        "n_leaves": len(rep.leaves),
+        "moe_expert_pair_fraction": max(expert_fracs) if expert_fracs else None,
+        "leaves": leaves,
+    }
+
+
+def run(quick: bool = False, family: str | None = None) -> dict:
+    if family is not None:
+        if family not in ALL_ARCHS:
+            raise ValueError(f"unknown family {family!r}; choose from {ALL_ARCHS}")
+        families = (family,)
+    else:
+        families = QUICK_FAMILIES if quick else ALL_ARCHS
+
+    rows = []
+    fam_results: dict[str, dict] = {}
+    failures: list[str] = []
+    for arch in families:
+        t0 = time.time()
+        res = _run_family(arch)
+        res["wall_clock_s"] = round(time.time() - t0, 2)
+        fam_results[arch] = res
+        rows.append(
+            {
+                "arch": arch,
+                "family": res["family"],
+                "rel_err_r0": res["parity_rel_err"],
+                "pair_frac_r005": res["pair_fraction_r005"],
+                "expert_frac": res["moe_expert_pair_fraction"] or "-",
+                "leaves": res["n_leaves"],
+            }
+        )
+        if not res["parity_ok"]:
+            failures.append(
+                f"{arch}: r=0 rel err {res['parity_rel_err']:.2e} > {PARITY_TOL:.0e}"
+            )
+        if not res["pair_fraction_r005"] > 0:
+            failures.append(f"{arch}: zero pairing rate at r={LEDGER_ROUNDING}")
+        if res["moe_expert_pair_fraction"] is not None and (
+            not res["moe_expert_pair_fraction"] > 0
+        ):
+            failures.append(f"{arch}: MoE expert einsums pair nothing")
+
+    print(fmt_table(
+        rows,
+        ["arch", "family", "rel_err_r0", "pair_frac_r005", "expert_frac", "leaves"],
+        title=f"model zoo: r=0 parity + r={LEDGER_ROUNDING} per-column pairing rate",
+    ))
+
+    payload = {
+        "rounding": LEDGER_ROUNDING,
+        "parity_tol": PARITY_TOL,
+        "families": fam_results,
+        "failures": failures,
+    }
+    write_result("model_zoo", payload)
+    if failures:
+        raise AssertionError("; ".join(failures))
+    return {
+        "perf_summary": {
+            "rounding": LEDGER_ROUNDING,
+            "families": {
+                a: {k: v for k, v in r.items() if k != "leaves"}
+                for a, r in fam_results.items()
+            },
+        }
+    }
+
+
+if __name__ == "__main__":
+    run()

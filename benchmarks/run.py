@@ -24,7 +24,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import fig8, pairing_rate_lm, roofline, table1
+from benchmarks import fig8, model_zoo, pairing_rate_lm, roofline, table1
 from benchmarks.common import write_result
 
 BENCHES = [
@@ -32,6 +32,7 @@ BENCHES = [
     ("fig8", "paper Fig. 8 + Fig. 3/4", fig8.run),
     ("lm_paired", "beyond paper: paired LM decode", fig8.run_lm_paired),
     ("pairing_rate_lm", "beyond paper", pairing_rate_lm.run),
+    ("model_zoo", "paired path across all ten config families", model_zoo.run),
     ("roofline", "dry-run analysis", roofline.run),
 ]
 
@@ -43,6 +44,11 @@ def main(argv: list[str] | None = None) -> int:
         "--only", action="append", default=None, metavar="NAME",
         help="run only the named bench (repeatable; for CI sharding): "
              + ", ".join(name for name, _, _ in BENCHES),
+    )
+    ap.add_argument(
+        "--family", default=None, metavar="ARCH",
+        help="restrict the model_zoo bench to one config family "
+             "(CI matrix legs; other benches ignore it)",
     )
     args = ap.parse_args(argv)
 
@@ -58,8 +64,9 @@ def main(argv: list[str] | None = None) -> int:
     for name, desc, fn in selected:
         print(f"\n{'='*70}\n== {name} ({desc})\n{'='*70}")
         t0 = time.time()
+        kwargs = {"family": args.family} if name == "model_zoo" else {}
         try:
-            results[name] = fn(quick=args.quick)
+            results[name] = fn(quick=args.quick, **kwargs)
             print(f"[{name}] done in {time.time()-t0:.1f}s")
         except Exception as e:  # noqa: BLE001
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")

@@ -62,22 +62,47 @@ def _conv_artifacts(arts: dict) -> list[_Artifact]:
     return out
 
 
-def _lm_metadata(params: Any) -> list[tuple[str, dict, np.ndarray]]:
-    """Every ``(path, meta dict, weight array)`` pairing-metadata pair."""
+def _walk_subs(node: dict, prefix: str = ""):
+    """Yield ``(dotted sub-path, sub dict)`` for every nested layer block
+    (``attn``, ``mlp``, ``moe``, ``moe.shared``, ``mamba``, …)."""
+    for name, sub in node.items():
+        if name.endswith("_pairing") or not isinstance(sub, dict):
+            continue
+        path = f"{prefix}.{name}" if prefix else name
+        yield path, sub
+        yield from _walk_subs(sub, path)
+
+
+def _lm_metadata(params: Any) -> list[tuple[str, dict, np.ndarray, bool]]:
+    """Every ``(path, meta dict, weight array, is_expert)`` pairing-metadata
+    entry — decoder and encoder stacks, nested sub-blocks included.
+
+    ``is_expert`` marks leading-expert-axis MoE weights ``(L, E, K, F)``
+    whose metadata stacks ``(L, E, …)`` instead of ``(L, …)``."""
     out = []
-    segments = params.get("segments", []) if isinstance(params, dict) else []
-    for si, seg in enumerate(segments):
-        for sub_name, sub in seg.items():
-            if not isinstance(sub, dict):
+    if not isinstance(params, dict):
+        return out
+    stacks = [("segments", params.get("segments", []))]
+    enc = params.get("encoder")
+    if isinstance(enc, dict):
+        stacks.append(("encoder.segments", enc.get("segments", [])))
+    for prefix, segments in stacks:
+        for si, seg in enumerate(segments):
+            if not isinstance(seg, dict):
                 continue
-            for key, meta in sub.items():
-                if not key.endswith("_pairing") or not isinstance(meta, dict):
-                    continue
-                w_name = key[: -len("_pairing")]
-                if w_name not in sub:
-                    continue
-                path = f"segments[{si}].{sub_name}.{key}"
-                out.append((path, meta, np.asarray(sub[w_name])))
+            for sub_path, sub in _walk_subs(seg):
+                for key, meta in sub.items():
+                    if not key.endswith("_pairing") or not isinstance(meta, dict):
+                        continue
+                    w_name = key[: -len("_pairing")]
+                    if w_name not in sub:
+                        continue
+                    arr = np.asarray(sub[w_name])
+                    is_expert = (
+                        sub_path.rsplit(".", 1)[-1] == "moe" and arr.ndim == 4
+                    )
+                    path = f"{prefix}[{si}].{sub_path}.{key}"
+                    out.append((path, meta, arr, is_expert))
     return out
 
 
@@ -85,25 +110,28 @@ def _lm_artifacts(params: Any) -> list[_Artifact]:
     from repro.core.transform import _lm_weight_matrix_shape
 
     out = []
-    for path, meta, arr in _lm_metadata(params):
+    for path, meta, arr, is_expert in _lm_metadata(params):
         w_name = path.rsplit(".", 1)[-1][: -len("_pairing")]
-        K, _ = _lm_weight_matrix_shape(w_name, arr.shape[1:])
-        I = np.asarray(meta["I"])
-        J = np.asarray(meta["J"])
-        R = np.asarray(meta["resid"])
-        pm = np.asarray(meta["pair_mask"])
-        rm = np.asarray(meta["resid_mask"])
+        lead = 2 if is_expert else 1  # (L, E, …) vs (L, …) stacking
+        K, _ = _lm_weight_matrix_shape(w_name, arr.shape[lead:])
+        flat = {
+            k: np.asarray(meta[k]).reshape(-1, *np.asarray(meta[k]).shape[lead:])
+            for k in _META_KEYS
+        }
+        I, J, R = flat["I"], flat["J"], flat["resid"]
+        pm, rm = flat["pair_mask"], flat["resid_mask"]
+        tag = "layer·expert" if is_expert else "layer"
         for layer in range(I.shape[0]):
-            if I.ndim == 3:  # blocked: (layers, blocks, Pmax)
+            if I.ndim == 3:  # blocked: (stack, blocks, Pmax)
                 for b in range(I.shape[1]):
                     out.append(_Artifact(
-                        location=f"{path}[layer {layer}, block {b}]", K=K,
+                        location=f"{path}[{tag} {layer}, block {b}]", K=K,
                         I=I[layer, b], J=J[layer, b], resid=R[layer, b],
                         pair_mask=pm[layer, b], resid_mask=rm[layer, b],
                     ))
-            else:  # structured: (layers, Pmax)
+            else:  # structured: (stack, Pmax)
                 out.append(_Artifact(
-                    location=f"{path}[layer {layer}]", K=K,
+                    location=f"{path}[{tag} {layer}]", K=K,
                     I=I[layer], J=J[layer], resid=R[layer],
                     pair_mask=pm[layer], resid_mask=rm[layer],
                 ))
@@ -223,10 +251,12 @@ def stacked_shapes(ctx: RuleContext):
 
     pairs = _lm_metadata(ctx.params)
     bad = 0
-    for path, meta, arr in pairs:
+    for path, meta, arr, is_expert in pairs:
         w_name = path.rsplit(".", 1)[-1][: -len("_pairing")]
+        lead = 2 if is_expert else 1  # (L, E, …) vs (L, …) stacking
+        stack = arr.shape[:lead]
         L = arr.shape[0]
-        K, _ = _lm_weight_matrix_shape(w_name, arr.shape[1:])
+        K, _ = _lm_weight_matrix_shape(w_name, arr.shape[lead:])
         problems = []
         missing = [k for k in _META_KEYS if k not in meta]
         if missing:
@@ -235,10 +265,12 @@ def stacked_shapes(ctx: RuleContext):
             if k not in meta:
                 continue
             m = np.asarray(meta[k])
-            if m.shape[0] != L:
-                problems.append(
-                    f"{k} stacks {m.shape[0]} layer(s), weight stacks {L}"
+            if m.shape[:lead] != stack:
+                got, want = (
+                    (m.shape[:lead], stack) if is_expert
+                    else (f"{m.shape[0]} layer(s)", L)
                 )
+                problems.append(f"{k} stacks {got}, weight stacks {want}")
             if k in ("I", "J", "resid") and m.size and (
                 m.min() < 0 or m.max() >= K
             ):

@@ -13,7 +13,7 @@ import dataclasses as dc
 
 from repro.analysis.core import RuleContext
 
-TARGETS = ("lenet_fused", "lm_decode", "serve_step")
+TARGETS = ("lenet_fused", "lm_decode", "serve_step", "model_zoo")
 
 # paired decode routes exactly the LM_PAIRED_WEIGHTS GEMMs (attention
 # q/k/v/out + MLP gate/up/down) through the subtractor kernel — one HBM
@@ -147,10 +147,31 @@ def build_serve_step() -> RuleContext:
     )
 
 
+def build_model_zoo() -> RuleContext:
+    """Pairing metadata of the hardest zoo member (deepseek: MLA latents,
+    leading-expert-axis MoE weights, shared experts, a leading dense layer)
+    — gates the valid-permutation / padding / stacked-shape invariants on
+    the expert-stacked metadata the MoE kernel path consumes."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.transform import pair_params
+    from repro.models import lm as M
+    from repro.models.param import unzip
+
+    cfg = dc.replace(get_smoke_config("deepseek-v2-lite-16b"), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    pm, _ = pair_params(
+        params, 0.05, mode="per_column", leaves=cfg.paired_leaves or None
+    )
+    return RuleContext(target="model_zoo", params=pm, expect={})
+
+
 _BUILDERS = {
     "lenet_fused": build_lenet_fused,
     "lm_decode": build_lm_decode,
     "serve_step": build_serve_step,
+    "model_zoo": build_model_zoo,
 }
 
 

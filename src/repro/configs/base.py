@@ -95,6 +95,14 @@ class ModelConfig:
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
 
+    # Pairing-eligible weight leaves as (sub-path, weight-name) pairs — the
+    # spec list consumed by ``core.transform.pair_params(..., leaves=...)``.
+    # Empty () means "no declaration": pair_params then falls back to its
+    # model-agnostic default superset.  Declare via default_paired_leaves()
+    # so a family that renames a weight fails loudly instead of silently
+    # dropping it from the paired path.
+    paired_leaves: tuple[tuple[str, str], ...] = ()
+
     # -- derived -----------------------------------------------------------
     @property
     def head_dim(self) -> int:
@@ -184,6 +192,50 @@ class ModelConfig:
         """6·N_active (train) or 2·N_active (decode) matmul FLOPs/token."""
         n = self.param_count(active_only=True)
         return (6.0 if training else 2.0) * n
+
+
+def default_paired_leaves(
+    *,
+    attn: bool = True,
+    mla: bool = False,
+    mlp: bool = True,
+    moe: bool = False,
+    moe_shared: bool = False,
+    ssm: bool = False,
+) -> tuple[tuple[str, str], ...]:
+    """The pairing-eligible leaf specs for a family, by block type.
+
+    Each entry is ``(sub-path, weight-name)`` into a decoder/encoder layer
+    dict; dotted sub-paths (``"moe.shared"``) address nested blocks.  Router,
+    embedding, cross-attention, conv-scan, and the MLA up-projections
+    (``w_uk``/``w_uv`` — absorbed into latent einsums, never a plain GEMM)
+    are deliberately not pairing-eligible.
+    """
+    leaves: list[tuple[str, str]] = []
+    if mla:
+        leaves += [("attn", "wq"), ("attn", "w_dkv"), ("attn", "w_kr"), ("attn", "wo")]
+    elif attn:
+        leaves += [("attn", "wq"), ("attn", "wk"), ("attn", "wv"), ("attn", "wo")]
+    if mlp:
+        leaves += [("mlp", "w_gate"), ("mlp", "w_up"), ("mlp", "w_down")]
+    if moe:
+        leaves += [("moe", "w_gate"), ("moe", "w_up"), ("moe", "w_down")]
+    if moe_shared:
+        leaves += [
+            ("moe.shared", "w_gate"),
+            ("moe.shared", "w_up"),
+            ("moe.shared", "w_down"),
+        ]
+    if ssm:
+        leaves += [
+            ("mamba", "w_z"),
+            ("mamba", "w_x"),
+            ("mamba", "w_B"),
+            ("mamba", "w_C"),
+            ("mamba", "w_dt"),
+            ("mamba", "w_out"),
+        ]
+    return tuple(leaves)
 
 
 # The four assigned input shapes (identical for every LM-family arch).

@@ -8,7 +8,7 @@ NOTE (also in DESIGN.md): the assignment line says both "64e top-6" and
 "2 shared+160 routed"; the published V2-Lite config is 64 routed + 2 shared,
 top-6 — we follow the publication.
 """
-from repro.configs.base import MlaConfig, ModelConfig, MoeConfig
+from repro.configs.base import MlaConfig, ModelConfig, MoeConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -30,6 +30,7 @@ def config() -> ModelConfig:
             first_k_dense=1,
             d_ff_dense=10944,
         ),
+        paired_leaves=default_paired_leaves(mla=True, moe=True, moe_shared=True),
     )
 
 
@@ -53,4 +54,5 @@ def smoke_config() -> ModelConfig:
             d_ff_dense=192,
             capacity_factor=4.0,  # smoke: no capacity drops
         ),
+        paired_leaves=default_paired_leaves(mla=True, moe=True, moe_shared=True),
     )

@@ -1,5 +1,5 @@
 """granite-3-2b — dense, GQA (kv=8). [hf:ibm-granite/granite-3.0-2b-base; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -14,6 +14,7 @@ def config() -> ModelConfig:
         vocab=49155,
         rope_theta=1e4,
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )
 
 
@@ -28,4 +29,5 @@ def smoke_config() -> ModelConfig:
         d_ff=128,
         vocab=256,
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )

@@ -3,7 +3,7 @@ parallel on the same input; 128 learned meta-tokens are prepended; 3 layers
 (first/middle/last) use full attention, the rest sliding-window.
 32L d=1600 25H (GQA kv=5) d_ff=5504 ssm_state=16. [arXiv:2411.13676; hf]
 """
-from repro.configs.base import ModelConfig, SsmConfig
+from repro.configs.base import ModelConfig, SsmConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -22,6 +22,7 @@ def config() -> ModelConfig:
         meta_tokens=128,
         ssm=SsmConfig(d_state=16, head_dim=64, expand=2, n_groups=1, chunk=256),
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(ssm=True),
     )
 
 
@@ -41,4 +42,5 @@ def smoke_config() -> ModelConfig:
         meta_tokens=8,
         ssm=SsmConfig(d_state=8, head_dim=16, expand=2, n_groups=1, chunk=16),
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(ssm=True),
     )

@@ -2,7 +2,7 @@
 InternViT frontend STUBBED: the first `vision_prefix` positions take
 precomputed patch embeddings (input_specs supply them). [arXiv:2404.16821; hf]
 """
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -17,6 +17,7 @@ def config() -> ModelConfig:
         vocab=92553,
         vision_prefix=256,  # one 448x448 tile → 256 patch embeddings
         rope_theta=1e6,
+        paired_leaves=default_paired_leaves(),
     )
 
 
@@ -31,4 +32,5 @@ def smoke_config() -> ModelConfig:
         d_ff=128,
         vocab=256,
         vision_prefix=8,
+        paired_leaves=default_paired_leaves(),
     )

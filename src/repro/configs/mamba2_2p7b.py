@@ -1,7 +1,7 @@
 """mamba2-2.7b — attention-free SSM (SSD / state-space duality).
 64L d=2560, d_state=128, head_dim=64, expand=2. [arXiv:2405.21060; unverified]
 """
-from repro.configs.base import ModelConfig, SsmConfig
+from repro.configs.base import ModelConfig, SsmConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -16,6 +16,7 @@ def config() -> ModelConfig:
         vocab=50280,
         ssm=SsmConfig(d_state=128, head_dim=64, expand=2, n_groups=1, chunk=256),
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(attn=False, mlp=False, ssm=True),
     )
 
 
@@ -31,4 +32,5 @@ def smoke_config() -> ModelConfig:
         vocab=256,
         ssm=SsmConfig(d_state=16, head_dim=16, expand=2, n_groups=1, chunk=32),
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(attn=False, mlp=False, ssm=True),
     )

@@ -1,6 +1,6 @@
 """mistral-large-123b — dense, GQA (kv=8).
 [hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -15,6 +15,7 @@ def config() -> ModelConfig:
         vocab=32768,
         d_head=128,
         rope_theta=1e6,
+        paired_leaves=default_paired_leaves(),
     )
 
 
@@ -29,4 +30,5 @@ def smoke_config() -> ModelConfig:
         d_ff=192,
         vocab=256,
         d_head=16,
+        paired_leaves=default_paired_leaves(),
     )

@@ -1,6 +1,6 @@
 """olmoe-1b-7b — MoE: 16L d=2048 16H (MHA kv=16), 64 experts top-8,
 expert d_ff=1024. [arXiv:2409.02060; hf]"""
-from repro.configs.base import ModelConfig, MoeConfig
+from repro.configs.base import ModelConfig, MoeConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -21,6 +21,7 @@ def config() -> ModelConfig:
             n_shared=0,
             first_k_dense=0,
         ),
+        paired_leaves=default_paired_leaves(mlp=False, moe=True),
     )
 
 
@@ -36,4 +37,5 @@ def smoke_config() -> ModelConfig:
         vocab=256,
         qk_norm=True,
         moe=MoeConfig(n_experts=8, top_k=2, d_ff_expert=96, n_shared=0, capacity_factor=4.0),
+        paired_leaves=default_paired_leaves(mlp=False, moe=True),
     )

@@ -1,5 +1,5 @@
 """qwen2-1.5b — dense, GQA (kv=2), QKV bias. [arXiv:2407.10671; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -15,6 +15,7 @@ def config() -> ModelConfig:
         qkv_bias=True,
         rope_theta=1e6,
         tie_embeddings=True,  # Qwen2-1.5B ties embeddings
+        paired_leaves=default_paired_leaves(),
     )
 
 
@@ -30,4 +31,5 @@ def smoke_config() -> ModelConfig:
         vocab=256,
         qkv_bias=True,
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )

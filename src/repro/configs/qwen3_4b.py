@@ -1,5 +1,5 @@
 """qwen3-4b — dense, GQA (kv=8), per-head QK-norm. [hf:Qwen/Qwen3-8B; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -16,6 +16,7 @@ def config() -> ModelConfig:
         qk_norm=True,
         rope_theta=1e6,
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )
 
 
@@ -32,4 +33,5 @@ def smoke_config() -> ModelConfig:
         d_head=16,
         qk_norm=True,
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )

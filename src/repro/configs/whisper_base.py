@@ -1,7 +1,7 @@
 """whisper-base — encoder-decoder, 6L each, d=512, 8H MHA, GELU+LayerNorm.
 Conv frontend is a STUB: input_specs provide precomputed frame embeddings.
 [arXiv:2212.04356; unverified]"""
-from repro.configs.base import EncoderConfig, ModelConfig
+from repro.configs.base import EncoderConfig, ModelConfig, default_paired_leaves
 
 
 def config() -> ModelConfig:
@@ -19,6 +19,7 @@ def config() -> ModelConfig:
         act="gelu",
         rope_theta=0.0,  # whisper uses absolute (sinusoidal) positions, no rope
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )
 
 
@@ -37,4 +38,5 @@ def smoke_config() -> ModelConfig:
         act="gelu",
         rope_theta=0.0,
         tie_embeddings=True,
+        paired_leaves=default_paired_leaves(),
     )

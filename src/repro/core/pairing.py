@@ -34,6 +34,10 @@ Three implementations live here:
 
 All pairing is offline preprocessing (runs once, numpy), exactly as in the
 paper ("the weights preprocessing occurs once before deploying the weights").
+``core.transform.pair_params`` applies these primitives across whole param
+trees — conv kernels, stacked decoder/encoder weights, and per-expert MoE
+matrices (one independent pairing per ``(layer, expert)``, stacked
+``(L, E, …)`` for the experts-as-blocks kernel layout).
 """
 from __future__ import annotations
 

@@ -189,13 +189,11 @@ def _path_str(path: Any) -> str:
 # LM pairing: artifacts for the decoder stack (kernel-executable, scan-ready)
 # ---------------------------------------------------------------------------
 
-# Decoder weights the paired LM path routes through the subtractor kernel.
-# Keys are (sub-dict, weight name); "wo" contracts over all-but-last axes
-# (the attention out-projection einsum "bshk,hkd->bsd"), everything else
-# over its leading axis.  Embeddings, norms, biases and the MLA latent
-# projections are deliberately absent: norms/biases are not GEMMs, the
-# embedding/lm_head gather-shaped matmuls never go through layers.dense,
-# and MLA blocks absorb their projections into the latent-space einsums.
+# Decoder weights of the *dense GQA* families.  Keys are (sub-path, weight
+# name); "wo" contracts over all-but-last axes (the attention out-projection
+# einsum "bshk,hkd->bsd"), everything else over its leading axis.  Kept as a
+# public name: tests and benches import it, and it seeds the model-agnostic
+# superset below.
 LM_PAIRED_WEIGHTS: tuple[tuple[str, str], ...] = (
     ("attn", "wq"),
     ("attn", "wk"),
@@ -205,6 +203,52 @@ LM_PAIRED_WEIGHTS: tuple[tuple[str, str], ...] = (
     ("mlp", "w_up"),
     ("mlp", "w_down"),
 )
+
+# Model-agnostic superset of pairing-eligible leaf specs across the model
+# zoo: dense GQA projections, the MLA down-projections (wq/w_dkv/w_kr/wo —
+# w_uk/w_uv stay absorbed in latent einsums), per-expert MoE weights (the
+# leading-expert-axis batched GEMMs), shared experts (nested sub-path), and
+# the Mamba in/out projections.  ``pair_params`` intersects this with what a
+# tree actually carries unless the caller pins an explicit ``leaves=`` list
+# (``ModelConfig.paired_leaves``).  Embeddings, norms, biases, routers,
+# cross-attention, and the conv-scan kernels are deliberately absent: they
+# are not plain GEMMs or never route through ``layers.dense``.
+DEFAULT_PAIRED_LEAVES: tuple[tuple[str, str], ...] = LM_PAIRED_WEIGHTS + (
+    ("attn", "w_dkv"),
+    ("attn", "w_kr"),
+    ("moe", "w_gate"),
+    ("moe", "w_up"),
+    ("moe", "w_down"),
+    ("moe.shared", "w_gate"),
+    ("moe.shared", "w_up"),
+    ("moe.shared", "w_down"),
+    ("mamba", "w_z"),
+    ("mamba", "w_x"),
+    ("mamba", "w_B"),
+    ("mamba", "w_C"),
+    ("mamba", "w_dt"),
+    ("mamba", "w_out"),
+)
+
+
+def _resolve_sub(seg: Any, sub_path: str) -> dict | None:
+    """The sub-dict at a dotted ``sub_path`` of a layer dict, or None."""
+    node = seg
+    for part in sub_path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node if isinstance(node, dict) else None
+
+
+def _set_sub(seg: dict, sub_path: str, new_sub: dict) -> None:
+    """Replace the sub-dict at ``sub_path``, shallow-copying intermediates."""
+    parts = sub_path.split(".")
+    node = seg
+    for part in parts[:-1]:
+        node[part] = dict(node[part])
+        node = node[part]
+    node[parts[-1]] = new_sub
 
 
 def _lm_weight_matrix_shape(name: str, shape: tuple[int, ...]) -> tuple[int, int]:
@@ -265,14 +309,246 @@ def _stack_blocked(pairings: list[BlockedPairing]) -> dict[str, np.ndarray]:
             "pair_mask": pmask, "resid_mask": rmask}
 
 
+def _any_pairing(node: Any) -> bool:
+    if not isinstance(node, dict):
+        return False
+    return any(k.endswith("_pairing") or _any_pairing(v) for k, v in node.items())
+
+
 def has_lm_pairing(params: Any) -> bool:
-    """True iff ``params`` already carries pair_lm_params metadata."""
-    segments = params.get("segments", []) if isinstance(params, dict) else []
-    return any(
-        isinstance(sub, dict) and any(k.endswith("_pairing") for k in sub)
-        for seg in segments
-        for sub in seg.values()
-    )
+    """True iff ``params`` already carries pair_params metadata (any depth:
+    decoder segments, encoder segments, nested shared-expert blocks)."""
+    if not isinstance(params, dict):
+        return False
+    trees = [params.get("segments", [])]
+    enc = params.get("encoder")
+    if isinstance(enc, dict):
+        trees.append(enc.get("segments", []))
+    return any(_any_pairing(seg) for segs in trees for seg in segs)
+
+
+def _pair_conv_tree(
+    params: Any,
+    rounding: float,
+    *,
+    mode: str,
+    block_n: int,
+    criterion: str,
+    min_dim: int,
+) -> tuple[Any, PairedModelReport]:
+    """The conv-tree arm of :func:`pair_params`: ``{name: {"w": 4-D}}``.
+
+    Emits the same ``"w_pairing"`` metadata-sibling layout as the LM arm,
+    just unstacked (no layer axis — conv trees are not scanned).  The
+    executable conv path keeps consuming :func:`build_conv_pairings`
+    artifacts; this arm exists so one entry point reports any tree.
+    """
+    leaves_report: list[LeafReport] = []
+    out = dict(params)
+    for name, leaf in params.items():
+        if not isinstance(leaf, dict) or "w" not in leaf:
+            continue
+        w = np.asarray(leaf["w"])
+        if w.ndim != 4 or w.dtype.kind != "f":
+            continue
+        kh, kw, cin, cout = w.shape
+        K, N = kh * kw * cin, cout
+        if K < min_dim or N < min_dim:
+            continue
+        wm = w.reshape(K, N).astype(np.float64)
+        if mode == "column_blocked":
+            bp = pair_rows_blocked(wm, rounding, block_n, criterion=criterion)
+            idx = bp.index_arrays()
+            meta = {
+                "I": idx["I"].astype(np.int32),
+                "J": idx["J"].astype(np.int32),
+                "resid": idx["resid"].astype(np.int32),
+                "pair_mask": idx["pair_mask"].astype(np.float32),
+                "resid_mask": idx["resid_mask"].astype(np.float32),
+            }
+            n_pairs = bp.weighted_pairs
+            pairing: StructuredPairing | BlockedPairing = bp
+        else:
+            sp = pair_rows_structured(wm, rounding, criterion=criterion)
+            meta = {
+                "I": np.asarray(sp.I, np.int32),
+                "J": np.asarray(sp.J, np.int32),
+                "resid": np.asarray(sp.resid, np.int32),
+                "pair_mask": np.ones(sp.n_pairs, np.float32),
+                "resid_mask": np.ones(len(sp.resid), np.float32),
+            }
+            n_pairs = sp.weighted_pairs
+            pairing = sp
+        new_leaf = dict(leaf)
+        new_leaf["w_pairing"] = meta
+        out[name] = new_leaf
+        leaves_report.append(
+            LeafReport(
+                path=f"{name}.w",
+                shape=tuple(w.shape),
+                n_weights=int(w.size),
+                n_pairs=int(n_pairs),
+                pair_fraction=2.0 * n_pairs / w.size,
+                pairing=pairing,
+            )
+        )
+    if not leaves_report:
+        raise ValueError(
+            "pair_params: no pairing-eligible conv leaves — expected a "
+            "{name: {'w': (kh, kw, cin, cout)}} tree with float kernels of "
+            f"GEMM dims >= {min_dim}; got keys {sorted(params)!r}"
+        )
+    report = PairedModelReport(rounding=rounding, mode=mode, leaves=leaves_report)
+    return out, report
+
+
+def pair_params(
+    params: Any,
+    rounding: float,
+    *,
+    mode: str = "structured",
+    block_n: int = 0,
+    leaves: tuple[tuple[str, str], ...] | None = None,
+    criterion: str = "rms",
+    min_dim: int = 8,
+) -> tuple[Any, PairedModelReport]:
+    """Pairing artifacts for every eligible weight of *any* param tree.
+
+    One model-agnostic entry point covering the whole zoo:
+
+    * **conv trees** (``{name: {"w": 4-D}}``, no ``"segments"`` key) — each
+      kernel paired as its im2col GEMM matrix, unstacked metadata;
+    * **stacked decoder/encoder weights** (``params["segments"]`` and
+      ``params["encoder"]["segments"]``, the lax.scan layout) — per-layer
+      pairings padded to the segment-wide (Pmax, Rmax) and stacked on the
+      layer axis, which a scan slices exactly like the weights themselves;
+    * **leading-expert-axis batched weights** (MoE ``(L, E, K, F)`` leaves)
+      — paired per layer *per expert*, metadata stacked ``(L, E, …)`` so the
+      expert axis rides next to the layer axis and the blocked kernel can
+      treat experts as column blocks.
+
+    Leaf selection is by ``(sub-path, weight-name)`` specs — dotted
+    sub-paths address nested blocks (``"moe.shared"``).  With ``leaves=None``
+    the :data:`DEFAULT_PAIRED_LEAVES` superset is intersected with what the
+    tree carries; passing an explicit list (``ModelConfig.paired_leaves``)
+    additionally *requires* every spec to match at least one segment, so a
+    renamed or mistyped weight fails loudly instead of silently falling off
+    the paired path.  Either way a tree yielding *no* pairing metadata at
+    all raises, listing what was looked for and what the tree carries.
+
+    Returns ``(params', report)``: the same tree with a sibling
+    ``"<name>_pairing"`` metadata entry next to each paired weight.  Weights
+    are **not** folded — magnitudes are recomputed live inside the trace
+    (``kernels.ops.fused_paired_dense`` / ``fused_paired_expert_dense``), so
+    the artifact survives ``jax.grad`` and weight updates.
+
+    ``mode`` picks the pairing-spectrum point: ``"structured"`` (one
+    shared-row pairing per matrix), ``"column_blocked"`` (one per
+    ``block_n`` output columns), or ``"per_column"`` (sugar for
+    ``block_n=1`` — the paper's Algorithm 1).
+    """
+    if mode == "per_column":
+        mode, block_n = "column_blocked", 1
+    assert mode in ("structured", "column_blocked"), f"unknown mode {mode!r}"
+    if mode == "column_blocked" and block_n < 1:
+        raise ValueError("mode='column_blocked' needs block_n >= 1")
+    if isinstance(params, dict) and "segments" not in params:
+        return _pair_conv_tree(
+            params, rounding, mode=mode, block_n=block_n,
+            criterion=criterion, min_dim=min_dim,
+        )
+
+    specs = tuple(leaves) if leaves is not None else DEFAULT_PAIRED_LEAVES
+    matched: set[tuple[str, str]] = set()
+    leaves_report: list[LeafReport] = []
+
+    def pair_stack(mats: np.ndarray) -> tuple[dict[str, np.ndarray], int]:
+        """Pair a (n, K, N) stack → (stacked metadata, weighted pair count)."""
+        if mode == "column_blocked":
+            ps_b = [
+                pair_rows_blocked(m, rounding, block_n, criterion=criterion)
+                for m in mats
+            ]
+            return _stack_blocked(ps_b), sum(p.weighted_pairs for p in ps_b)
+        ps_s = [pair_rows_structured(m, rounding, criterion=criterion) for m in mats]
+        return _stack_structured(ps_s), sum(p.weighted_pairs for p in ps_s)
+
+    def pair_segments(segments: list, prefix: str) -> list:
+        new_segs = []
+        for si, seg in enumerate(segments):
+            new_seg = dict(seg)
+            for sub_path, w_name in specs:
+                sub = _resolve_sub(new_seg, sub_path)
+                if sub is None or w_name not in sub:
+                    continue
+                matched.add((sub_path, w_name))
+                arr = np.asarray(sub[w_name])
+                if arr.dtype.kind != "f" or arr.ndim < 3:
+                    continue  # stacked (layers, …) float matrices only
+                L = arr.shape[0]
+                # MoE expert weights carry a second leading (expert) axis:
+                # pair each expert's (K, F) matrix separately.
+                expert = sub_path.split(".")[-1] == "moe" and arr.ndim == 4
+                mat_shape = arr.shape[2:] if expert else arr.shape[1:]
+                K, N = _lm_weight_matrix_shape(w_name, mat_shape)
+                if K < min_dim or N < min_dim:
+                    continue
+                mats = arr.reshape(-1, K, N).astype(np.float64)
+                meta, n_pairs = pair_stack(mats)
+                if expert:
+                    E = arr.shape[1]
+                    meta = {
+                        k: v.reshape(L, E, *v.shape[1:]) for k, v in meta.items()
+                    }
+                new_sub = dict(_resolve_sub(new_seg, sub_path))
+                new_sub[w_name + "_pairing"] = meta
+                _set_sub(new_seg, sub_path, new_sub)
+                leaves_report.append(
+                    LeafReport(
+                        path=f"{prefix}[{si}].{sub_path}.{w_name}",
+                        shape=tuple(arr.shape),
+                        n_weights=int(mats.size),
+                        n_pairs=int(n_pairs),
+                        pair_fraction=2.0 * n_pairs / mats.size,
+                    )
+                )
+            new_segs.append(new_seg)
+        return new_segs
+
+    out = dict(params)
+    out["segments"] = pair_segments(params.get("segments", []), "segments")
+    enc = params.get("encoder")
+    if isinstance(enc, dict) and isinstance(enc.get("segments"), list):
+        enc = dict(enc)
+        enc["segments"] = pair_segments(enc["segments"], "encoder.segments")
+        out["encoder"] = enc
+
+    unmatched = [s for s in specs if s not in matched]
+    if leaves is not None and unmatched:
+        raise ValueError(
+            "pair_params: no weight matched leaf spec(s) "
+            + ", ".join(f"{sp}.{wn}" for sp, wn in unmatched)
+            + " — check the config's paired_leaves declaration against the "
+            "param tree (sub-blocks present: "
+            + ", ".join(sorted({
+                k for seg in params.get("segments", [])
+                for k, v in seg.items() if isinstance(v, dict)
+            }))
+            + ")"
+        )
+    if not leaves_report:
+        raise ValueError(
+            "pair_params: no pairing-eligible weights found — looked for "
+            + ", ".join(f"{sp}.{wn}" for sp, wn in specs)
+            + " among stacked float matrices with GEMM dims >= "
+            f"{min_dim}; tree carries sub-blocks "
+            + ", ".join(sorted({
+                k for seg in params.get("segments", [])
+                for k, v in seg.items() if isinstance(v, dict)
+            }))
+        )
+    report = PairedModelReport(rounding=rounding, mode=mode, leaves=leaves_report)
+    return out, report
 
 
 def pair_lm_params(
@@ -284,86 +560,16 @@ def pair_lm_params(
     criterion: str = "rms",
     min_dim: int = 8,
 ) -> tuple[Any, PairedModelReport]:
-    """Pairing artifacts for every dense decoder weight of an LM param tree.
+    """Backward-compatible LM entry point: :func:`pair_params` in auto mode.
 
-    The LM analogue of :func:`build_conv_pairings`: walks the stacked
-    decoder segments (``params["segments"]``, the lax.scan layout) and runs
-    the paper's preprocessing per layer on each eligible weight —
-    attention qkv/out projections and the MLP up/gate/down matrices
-    (:data:`LM_PAIRED_WEIGHTS`); embeddings, norms and biases are skipped.
-    MLA attention sub-dicts are skipped whole (their projections live in
-    latent-space einsums, not ``layers.dense``).
-
-    Returns ``(params', report)`` where ``params'`` is the same tree with a
-    sibling ``"<name>_pairing"`` metadata entry next to each paired weight:
-    stacked ``(layers, …)`` index/mask arrays (per-layer pairings padded to
-    the segment-wide (Pmax, Rmax)), which a ``lax.scan`` over the segment
-    slices per layer exactly like the weights themselves.  The weights are
-    **not** folded — magnitudes are recomputed live inside the trace
-    (``kernels.ops.fused_paired_dense``), so the artifact survives
-    ``jax.grad`` and weight updates, same contract as ``paired_conv``.
-
-    ``mode`` picks the pairing-spectrum point: ``"structured"`` (one
-    shared-row pairing per layer), ``"column_blocked"`` (one per
-    ``block_n`` output columns — kernel-executable down to the paper's
-    per-column pairing), or ``"per_column"`` (sugar for ``block_n=1``).
+    Pairs whatever subset of :data:`DEFAULT_PAIRED_LEAVES` the tree carries
+    (a plain GQA tree yields exactly the :data:`LM_PAIRED_WEIGHTS` seven);
+    raises if nothing matches at all.
     """
-    if mode == "per_column":
-        mode, block_n = "column_blocked", 1
-    assert mode in ("structured", "column_blocked"), f"unknown mode {mode!r}"
-    if mode == "column_blocked" and block_n < 1:
-        raise ValueError("mode='column_blocked' needs block_n >= 1")
-
-    leaves_report: list[LeafReport] = []
-    out = dict(params)
-    new_segs = []
-    for si, seg in enumerate(params.get("segments", [])):
-        new_seg = dict(seg)
-        for sub_name, w_name in LM_PAIRED_WEIGHTS:
-            sub = new_seg.get(sub_name)
-            if not isinstance(sub, dict) or w_name not in sub:
-                continue
-            if sub_name == "attn" and "w_dkv" in sub:
-                continue  # MLA: projections don't route through layers.dense
-            arr = np.asarray(sub[w_name])
-            if arr.dtype.kind != "f" or arr.ndim < 3:
-                continue  # stacked (layers, …) float matrices only
-            L = arr.shape[0]
-            K, N = _lm_weight_matrix_shape(w_name, arr.shape[1:])
-            if K < min_dim or N < min_dim:
-                continue
-            mats = arr.reshape(L, K, N).astype(np.float64)
-            if mode == "column_blocked":
-                pairings_b = [
-                    pair_rows_blocked(mats[l], rounding, block_n,
-                                      criterion=criterion)
-                    for l in range(L)
-                ]
-                meta = _stack_blocked(pairings_b)
-                n_pairs = sum(bp.weighted_pairs for bp in pairings_b)
-            else:
-                pairings_s = [
-                    pair_rows_structured(mats[l], rounding, criterion=criterion)
-                    for l in range(L)
-                ]
-                meta = _stack_structured(pairings_s)
-                n_pairs = sum(sp.weighted_pairs for sp in pairings_s)
-            new_sub = dict(sub)
-            new_sub[w_name + "_pairing"] = meta
-            new_seg[sub_name] = new_sub
-            leaves_report.append(
-                LeafReport(
-                    path=f"segments[{si}].{sub_name}.{w_name}",
-                    shape=tuple(arr.shape),
-                    n_weights=int(mats.size),
-                    n_pairs=int(n_pairs),
-                    pair_fraction=2.0 * n_pairs / mats.size,
-                )
-            )
-        new_segs.append(new_seg)
-    out["segments"] = new_segs
-    report = PairedModelReport(rounding=rounding, mode=mode, leaves=leaves_report)
-    return out, report
+    return pair_params(
+        params, rounding, mode=mode, block_n=block_n,
+        criterion=criterion, min_dim=min_dim,
+    )
 
 
 def pair_model_params(

@@ -310,16 +310,21 @@ def _lm_blocked_weights(w2: jax.Array, n_blocks: int, bn: int) -> jax.Array:
     return w_p.reshape(K, n_blocks, bn).transpose(1, 0, 2)
 
 
+def _take_block_segments(wm_t: jax.Array, meta: dict):
+    """Live per-block (kmat, w_res) from block-major (B, K, bn) weights and
+    (B, Pmax/Rmax) lane lists."""
+    take = lambda ind: jnp.take_along_axis(wm_t, ind[:, :, None], axis=1)
+    pmask = meta["pair_mask"][:, :, None].astype(wm_t.dtype)
+    rmask = meta["resid_mask"][:, :, None].astype(wm_t.dtype)
+    kmat = (take(meta["I"]) - take(meta["J"])) * 0.5 * pmask  # (B, Pmax, bn)
+    w_res = take(meta["resid"]) * rmask  # (B, Rmax, bn)
+    return kmat, w_res
+
+
 def _lm_blocked_segments(w2: jax.Array, meta: dict, bn: int):
     """Packed per-block live (kmat, w_res) for a blocked LM pairing."""
-    I, J, Rm = meta["I"], meta["J"], meta["resid"]
-    wm_t = _lm_blocked_weights(w2, I.shape[0], bn)  # (B, K, bn)
-    take = lambda ind: jnp.take_along_axis(wm_t, ind[:, :, None], axis=1)
-    pmask = meta["pair_mask"][:, :, None].astype(w2.dtype)
-    rmask = meta["resid_mask"][:, :, None].astype(w2.dtype)
-    kmat = (take(I) - take(J)) * 0.5 * pmask  # (B, Pmax, bn)
-    w_res = take(Rm) * rmask  # (B, Rmax, bn)
-    return kmat, w_res
+    wm_t = _lm_blocked_weights(w2, meta["I"].shape[0], bn)  # (B, K, bn)
+    return _take_block_segments(wm_t, meta)
 
 
 def fold_lm_weight(w2: jax.Array, meta: dict, pair_block_n: int = 0) -> jax.Array:
@@ -450,6 +455,166 @@ def fused_paired_dense(
         block_m, block_n, block_k, interpret,
     )
     return fn(x, w, bias, residual, dict(meta))
+
+
+# ---------------------------------------------------------------------------
+# differentiable fused paired dense over a leading expert axis (MoE)
+# ---------------------------------------------------------------------------
+#
+# Per-expert pairing executes on the *existing* column-blocked Pallas kernel
+# by mapping experts onto the kernel's block grid: structured-per-expert
+# metadata (E, Pmax) makes each expert one block of bn = F output columns;
+# blocked-within-expert metadata (E, Bc, Pmax) flattens to E·Bc blocks of
+# pair_block_n columns each.  Either way the result is (M, E, F) — the
+# einsum "tk,ekf->tef" (shared activations) or "etk,ekf->tef" (per-expert
+# activations; the kernel contracts each expert's token rows against that
+# expert's weight segments only, so nothing is wasted on the batching).
+
+
+def _expert_blocked_weights(w: jax.Array, n_blocks: int, bn: int) -> jax.Array:
+    """(E, K, F) live expert weights → block-major (E·n_blocks, K, bn),
+    zero-padding the short last block of each expert."""
+    E, K, F = w.shape
+    pad = n_blocks * bn - F
+    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, pad))) if pad else w
+    return (
+        w_p.reshape(E, K, n_blocks, bn)
+        .transpose(0, 2, 1, 3)
+        .reshape(E * n_blocks, K, bn)
+    )
+
+
+def fold_lm_expert_weight(
+    w: jax.Array, meta: dict, pair_block_n: int = 0
+) -> jax.Array:
+    """Dense (E, K, F) equivalent of the per-expert paired weights.
+
+    The expert-axis analogue of :func:`fold_lm_weight` (backward-pass
+    function and test oracle); same scatter-add zero-lane trick."""
+    E, K, F = w.shape
+    if meta["I"].ndim == 3:  # blocked-within-expert: (E, Bc, Pmax) lanes
+        bn = pair_block_n
+        Bc = meta["I"].shape[1]
+        assert bn >= 1 and Bc == -(-F // bn), (Bc, F, bn)
+        m = {k: v.reshape(E * Bc, *v.shape[2:]) for k, v in meta.items()}
+        kmat, w_res = _take_block_segments(_expert_blocked_weights(w, Bc, bn), m)
+        bar = jnp.arange(E * Bc)[:, None]
+        wf_t = (
+            jnp.zeros((E * Bc, K, bn), w.dtype)
+            .at[bar, m["I"]].add(kmat)
+            .at[bar, m["J"]].add(-kmat)
+            .at[bar, m["resid"]].add(w_res)
+        )
+        return (
+            wf_t.reshape(E, Bc, K, bn)
+            .transpose(0, 2, 1, 3)
+            .reshape(E, K, Bc * bn)[:, :, :F]
+        )
+    kmat, w_res = _take_block_segments(w, meta)  # expert = one block of F cols
+    bar = jnp.arange(E)[:, None]
+    return (
+        jnp.zeros_like(w)
+        .at[bar, meta["I"]].add(kmat)
+        .at[bar, meta["J"]].add(-kmat)
+        .at[bar, meta["resid"]].add(w_res)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_paired_expert_dense_grad(
+    activation, blocked, pair_block_n, x_per_expert, block_m, block_k, interpret
+):
+    """custom_vjp factory for the expert-axis paired GEMM — the same
+    Pallas-forward / folded-XLA-backward split as _fused_paired_dense_grad,
+    with the expert axis riding the blocked kernel's grid dimension."""
+    from repro.kernels.paired_matmul import ACTIVATIONS
+
+    def primal(x, w, meta):
+        E, K, F = w.shape
+        if blocked:
+            Bc = meta["I"].shape[1]
+            bn = pair_block_n
+            m = {k: v.reshape(E * Bc, *v.shape[2:]) for k, v in meta.items()}
+            kmat, w_res = _take_block_segments(
+                _expert_blocked_weights(w, Bc, bn), m
+            )
+        else:
+            Bc, bn = 1, F
+            m = meta
+            kmat, w_res = _take_block_segments(w, meta)
+        perm = jnp.concatenate([m["I"], m["J"], m["resid"]], axis=-1)
+        if x_per_expert:
+            gather = lambda xe, pe: jnp.moveaxis(jnp.take(xe, pe, axis=-1), -2, 0)
+            xg = jax.vmap(gather)(x, perm.reshape(E, Bc, -1))  # (E, Bc, M, K')
+            xg = xg.reshape(E * Bc, x.shape[-2], -1)
+        else:
+            xg = jnp.moveaxis(jnp.take(x, perm, axis=-1), -2, 0)  # (E·Bc, M, K')
+        y = paired_matmul_blocked(
+            xg, kmat.astype(x.dtype), w_res.astype(x.dtype),
+            n_cols=E * Bc * bn, activation=activation,
+            block_m=block_m, block_k=block_k, interpret=interpret,
+        )
+        return y.reshape(x.shape[-2], E, Bc * bn)[..., :F]
+
+    def ref(x, w, meta):
+        wf = fold_lm_expert_weight(w, meta, pair_block_n)
+        eq = "etk,ekf->tef" if x_per_expert else "tk,ekf->tef"
+        return ACTIVATIONS[activation](jnp.einsum(eq, x, wf))
+
+    @jax.custom_vjp
+    def f(x, w, meta):
+        return primal(x, w, meta)
+
+    def fwd(x, w, meta):
+        return primal(x, w, meta), (x, w, meta)
+
+    def bwd(saved, dy):
+        x, w, meta = saved
+        _, vjp = jax.vjp(lambda x, w: ref(x, w, meta), x, w)
+        dx, dw = vjp(dy)
+        dmeta = {
+            k: np.zeros(jnp.shape(a), jax.dtypes.float0)
+            if jnp.issubdtype(jnp.result_type(a), jnp.integer)
+            else jnp.zeros_like(a)
+            for k, a in meta.items()
+        }
+        return dx, dw.astype(w.dtype), dmeta
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fused_paired_expert_dense(
+    x: jax.Array,  # (M, K) shared or (E, M, K) per-expert activations
+    w: jax.Array,  # (E, K, F) live expert weights (one layer's scan slice)
+    meta: dict,  # (E, …) pairing metadata (core.transform.pair_params)
+    *,
+    activation: str = "none",
+    x_per_expert: bool = False,
+    pair_block_n: int = 0,
+    block_m: int = 0,
+    block_k: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Differentiable per-expert paired GEMM → (M, E, F).
+
+    The MoE analogue of :func:`fused_paired_dense`: ``meta`` holds one frozen
+    lane structure *per expert* — ``(E, Pmax)`` lane lists select the
+    structured-per-expert layout (each expert = one kernel block of all F
+    columns), ``(E, Bc, Pmax)`` the blocked-within-expert one
+    (``pair_block_n`` columns per block, as the metadata was built).
+    ``x_per_expert=True`` contracts expert ``e``'s rows ``x[e]`` against
+    expert ``e``'s weights (the "etk,ekf->tef" einsum); otherwise every
+    expert sees the same (M, K) activations ("tk,ekf->tef").
+    """
+    blocked = meta["I"].ndim == 3
+    if blocked and pair_block_n < 1:
+        raise ValueError("blocked expert pairing metadata needs pair_block_n >= 1")
+    fn = _fused_paired_expert_dense_grad(
+        activation, blocked, pair_block_n if blocked else 0,
+        bool(x_per_expert), block_m, block_k, interpret,
+    )
+    return fn(x, w, dict(meta))
 
 
 # ---------------------------------------------------------------------------

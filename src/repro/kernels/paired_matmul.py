@@ -507,6 +507,13 @@ def paired_matmul_blocked_pallas(
     residual-add epilogue (``residual`` lives in *output* space, so it is
     indexed like the output tile — blocks only partition the contraction
     metadata) behave exactly as in :func:`paired_matmul_pallas`, per block.
+
+    The block axis doubles as the MoE **expert grid**: per-expert pairings
+    (``core.transform.pair_params`` on ``(L, E, K, F)`` weights) map each
+    expert — or each ``(expert, column-block)`` cell — onto one ``B`` entry
+    with its own permuted activation rows, so
+    :func:`repro.kernels.ops.fused_paired_expert_dense` runs the whole
+    expert batch as a single blocked launch.
     """
     assert pool == "none" or pool in POOLS, f"unknown pool {pool!r}"
     has_pool = pool != "none"

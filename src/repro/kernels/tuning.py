@@ -354,7 +354,12 @@ def resolve_blocks(
     blocks: int = 1,
     residual: bool = False,
 ) -> TileConfig:
-    """Fill any zero block size from the cache/heuristic (explicit wins)."""
+    """Fill any zero block size from the cache/heuristic (explicit wins).
+
+    ``blocks`` is the column-block count of the blocked paired GEMM —
+    including the experts-as-blocks layout, where it is ``E`` (or
+    ``E·ceil(F/bn)``) and scales the per-launch metadata VMEM the
+    heuristic budgets for."""
     if block_m and block_n and block_k:
         return TileConfig(block_m, block_n, block_k)
     auto = choose_blocks(

@@ -461,16 +461,26 @@ def mla_block(
     q_chunk: int = 1024,
     k_chunk: int = 1024,
 ) -> jax.Array:
-    """Training/prefill MLA: materialise per-head K/V from the latent."""
+    """Training/prefill MLA: materialise per-head K/V from the latent.
+
+    The down-projections (wq/w_dkv/w_kr) and the out-projection route
+    through `dense` in the flattened-head view — onto the subtractor kernel
+    when their weights carry pair_params metadata — while the latent
+    up-projections (w_uk/w_uv) stay as einsums (absorbed-matrix form)."""
     m = cfg.mla
     cdt = x.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    d = x.shape[-1]
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    wq = p["wq"].astype(cdt)
+    q = dense(x, wq.reshape(d, H * qk),
+              pairing=p.get("wq_pairing")).reshape(*x.shape[:-1], H, qk)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
-    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cdt))
+    c_kv = dense(x, p["w_dkv"].astype(cdt), pairing=p.get("w_dkv_pairing"))
     c_kv = rms_head_norm(p["kv_norm"], c_kv)
-    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(cdt))
+    k_rope = dense(x, p["w_kr"].astype(cdt), pairing=p.get("w_kr_pairing"))
     k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rope)
 
     k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(cdt))
@@ -484,7 +494,9 @@ def mla_block(
     out = flash_attention(qc, kc, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qc.shape[-1] - v.shape[-1]))),
                           causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
     out = out[..., : m.v_head_dim]
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return dense(out.reshape(*out.shape[:-2], H * m.v_head_dim),
+                 p["wo"].astype(cdt).reshape(H * m.v_head_dim, d),
+                 pairing=p.get("wo_pairing"))
 
 
 def mla_decode_block(
@@ -500,14 +512,19 @@ def mla_decode_block(
     m = cfg.mla
     cdt = x.dtype
     B = x.shape[0]
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    d = x.shape[-1]
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    q = dense(x, p["wq"].astype(cdt).reshape(d, H * qk),
+              pairing=p.get("wq_pairing")).reshape(*x.shape[:-1], H, qk)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = rope(q_rope, pos[:, None], cfg.rope_theta)
 
-    c_new = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cdt))
+    c_new = dense(x, p["w_dkv"].astype(cdt), pairing=p.get("w_dkv_pairing"))
     c_new = rms_head_norm(p["kv_norm"], c_new)
     kr_new = rope(
-        jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(cdt))[:, :, None, :], pos[:, None], cfg.rope_theta
+        dense(x, p["w_kr"].astype(cdt), pairing=p.get("w_kr_pairing"))[:, :, None, :],
+        pos[:, None], cfg.rope_theta,
     )[:, :, 0, :]
 
     bidx = jnp.arange(B)
@@ -526,7 +543,9 @@ def mla_decode_block(
     o_lat = jnp.einsum("bhs,bsr->bhr", pr.astype(cdt), c_kv, preferred_element_type=jnp.float32).astype(cdt)
     # absorb W_uv into the output projection
     out = jnp.einsum("bhr,rhk->bhk", o_lat, p["w_uv"].astype(cdt))
-    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(cdt))
+    y = dense(out.reshape(B, H * m.v_head_dim),
+              p["wo"].astype(cdt).reshape(H * m.v_head_dim, d),
+              pairing=p.get("wo_pairing"))
     return y[:, None], {"c_kv": c_kv, "k_rope": k_rope}
 
 
@@ -651,11 +670,24 @@ def moe_block(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.A
 
     Tokens over per-sequence capacity are dropped (standard GShard
     trade-off)."""
+    from repro.kernels import ops as kops
+
     mo = cfg.moe
     B, S, d = x.shape
     T = B * S
     E, K = mo.n_experts, mo.top_k
     cdt = x.dtype
+
+    # Expert GEMMs route through the subtractor kernel when pair_params
+    # metadata is attached and a paired policy is active — experts map onto
+    # the blocked kernel's column-block grid (shard_map path stays unpaired:
+    # its per-rank expert slices would need per-rank metadata slicing).
+    ppol = kops.current_paired_gemm_policy()
+    paired = ppol is not None and "w_gate_pairing" in p
+    ekw = dict(
+        pair_block_n=ppol.pair_block_n, block_m=ppol.block_m,
+        block_k=ppol.block_k, interpret=ppol.interpret,
+    ) if paired else {}
 
     x2 = x.reshape(T, d)
     logits = jnp.einsum("td,de->te", x2.astype(jnp.float32), p["router"].astype(jnp.float32))
@@ -667,17 +699,29 @@ def moe_block(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.A
         # decode / tiny-batch path: run every expert densely — no capacity,
         # no token drops (what serving engines do for single-token steps,
         # where dispatch overhead would dominate the tiny GEMMs).
-        g = activation(cfg.act, jnp.einsum("td,edf->tef", x2, p["w_gate"].astype(cdt)))
-        u = jnp.einsum("td,edf->tef", x2, p["w_up"].astype(cdt))
-        y_all = jnp.einsum("tef,efd->ted", g * u, p["w_down"].astype(cdt))
+        if paired:
+            g = kops.fused_paired_expert_dense(
+                x2, p["w_gate"].astype(cdt), p["w_gate_pairing"],
+                activation=cfg.act, **ekw)
+            u = kops.fused_paired_expert_dense(
+                x2, p["w_up"].astype(cdt), p["w_up_pairing"], **ekw)
+            y_all = kops.fused_paired_expert_dense(
+                jnp.moveaxis(g * u, 1, 0), p["w_down"].astype(cdt),
+                p["w_down_pairing"], x_per_expert=True, **ekw)
+        else:
+            g = activation(cfg.act, jnp.einsum("td,edf->tef", x2, p["w_gate"].astype(cdt)))
+            u = jnp.einsum("td,edf->tef", x2, p["w_up"].astype(cdt))
+            y_all = jnp.einsum("tef,efd->ted", g * u, p["w_down"].astype(cdt))
         w_full = jnp.zeros((T, E), cdt)
         w_full = w_full.at[jnp.arange(T)[:, None], topi].set(topw.astype(cdt))
         y2 = jnp.einsum("ted,te->td", y_all, w_full)
         if mo.n_shared:
             sh = p["shared"]
-            gs = activation(cfg.act, jnp.einsum("td,df->tf", x2, sh["w_gate"].astype(cdt)))
-            us = jnp.einsum("td,df->tf", x2, sh["w_up"].astype(cdt))
-            y2 = y2 + jnp.einsum("tf,fd->td", gs * us, sh["w_down"].astype(cdt))
+            gs = dense(x2, sh["w_gate"].astype(cdt), act=cfg.act,
+                       pairing=sh.get("w_gate_pairing"))
+            us = dense(x2, sh["w_up"].astype(cdt), pairing=sh.get("w_up_pairing"))
+            y2 = y2 + dense(gs * us, sh["w_down"].astype(cdt),
+                            pairing=sh.get("w_down_pairing"))
         return y2.reshape(B, S, d), jnp.float32(0.0)
 
     # ---- choose the expert-compute path ------------------------------------
@@ -698,9 +742,24 @@ def moe_block(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.A
         x = constrain(x, "batch", None, None)
         xb, inv_tok, inv_w, counts, C = _moe_route(cfg, x, topi, topw)
         xb = constrain(xb, "batch", "experts", None, None)
-        g = activation(cfg.act, jnp.einsum("becd,edf->becf", xb, p["w_gate"].astype(cdt)))
-        u = jnp.einsum("becd,edf->becf", xb, p["w_up"].astype(cdt))
-        yb = jnp.einsum("becf,efd->becd", g * u, p["w_down"].astype(cdt))
+        if paired:
+            # experts-as-column-blocks: flatten the (B, C) token dims so every
+            # expert's buffer is one row block of the blocked subtractor GEMM
+            xe = xb.transpose(1, 0, 2, 3).reshape(E, B * C, d)
+            g = kops.fused_paired_expert_dense(
+                xe, p["w_gate"].astype(cdt), p["w_gate_pairing"],
+                activation=cfg.act, x_per_expert=True, **ekw)
+            u = kops.fused_paired_expert_dense(
+                xe, p["w_up"].astype(cdt), p["w_up_pairing"],
+                x_per_expert=True, **ekw)
+            yb2 = kops.fused_paired_expert_dense(
+                jnp.moveaxis(g * u, 1, 0), p["w_down"].astype(cdt),
+                p["w_down_pairing"], x_per_expert=True, **ekw)
+            yb = yb2.reshape(B, C, E, d).transpose(0, 2, 1, 3)
+        else:
+            g = activation(cfg.act, jnp.einsum("becd,edf->becf", xb, p["w_gate"].astype(cdt)))
+            u = jnp.einsum("becd,edf->becf", xb, p["w_up"].astype(cdt))
+            yb = jnp.einsum("becf,efd->becd", g * u, p["w_down"].astype(cdt))
         yb = constrain(yb, "batch", "experts", None, None)
         y2 = _moe_combine(B, S, d, yb, inv_tok, inv_w, cdt)
         counts = counts.sum(0)
@@ -708,9 +767,11 @@ def moe_block(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.A
     if mo.n_shared:
         sh = p["shared"]
         x3 = x.reshape(T, d)
-        gs = activation(cfg.act, jnp.einsum("td,df->tf", x3, sh["w_gate"].astype(cdt)))
-        us = jnp.einsum("td,df->tf", x3, sh["w_up"].astype(cdt))
-        y2 = y2 + jnp.einsum("tf,fd->td", gs * us, sh["w_down"].astype(cdt)).reshape(B, S, d)
+        gs = dense(x3, sh["w_gate"].astype(cdt), act=cfg.act,
+                   pairing=sh.get("w_gate_pairing"))
+        us = dense(x3, sh["w_up"].astype(cdt), pairing=sh.get("w_up_pairing"))
+        y2 = y2 + dense(gs * us, sh["w_down"].astype(cdt),
+                        pairing=sh.get("w_down_pairing")).reshape(B, S, d)
 
     # ---- load-balance aux loss (Switch-style) -------------------------------
     me = gates.mean(0)  # mean router prob per expert
@@ -928,11 +989,11 @@ def ssm_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     d_in = s.expand * cfg.d_model
     H = d_in // s.head_dim
 
-    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(cdt))
-    xi = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cdt))
-    Bi = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(cdt))
-    Ci = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(cdt))
-    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(cdt))
+    z = dense(x, p["w_z"].astype(cdt), pairing=p.get("w_z_pairing"))
+    xi = dense(x, p["w_x"].astype(cdt), pairing=p.get("w_x_pairing"))
+    Bi = dense(x, p["w_B"].astype(cdt), pairing=p.get("w_B_pairing"))
+    Ci = dense(x, p["w_C"].astype(cdt), pairing=p.get("w_C_pairing"))
+    dt = dense(x, p["w_dt"].astype(cdt), pairing=p.get("w_dt_pairing"))
 
     xi = _causal_conv(xi, p["conv_x"].astype(cdt))
     Bi = _causal_conv(Bi, p["conv_B"].astype(cdt))
@@ -953,7 +1014,7 @@ def ssm_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     y = y * jax.nn.silu(z)
     yf = y.astype(jnp.float32)
     y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-6) * p["norm"]).astype(cdt)
-    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cdt))
+    return dense(y, p["w_out"].astype(cdt), pairing=p.get("w_out_pairing"))
 
 
 def ssm_decode_block(
@@ -969,11 +1030,11 @@ def ssm_decode_block(
     H = d_in // s.head_dim
     Bb = x.shape[0]
 
-    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(cdt))[:, 0]
-    xi = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cdt))[:, 0]
-    Bi = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(cdt))[:, 0]
-    Ci = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(cdt))[:, 0]
-    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(cdt))[:, 0]
+    z = dense(x, p["w_z"].astype(cdt), pairing=p.get("w_z_pairing"))[:, 0]
+    xi = dense(x, p["w_x"].astype(cdt), pairing=p.get("w_x_pairing"))[:, 0]
+    Bi = dense(x, p["w_B"].astype(cdt), pairing=p.get("w_B_pairing"))[:, 0]
+    Ci = dense(x, p["w_C"].astype(cdt), pairing=p.get("w_C_pairing"))[:, 0]
+    dt = dense(x, p["w_dt"].astype(cdt), pairing=p.get("w_dt_pairing"))[:, 0]
 
     def conv_step(cache_c, new, w):
         # cache_c: (B, W-1, C); new: (B, C)
@@ -1005,5 +1066,5 @@ def ssm_decode_block(
     y = y * jax.nn.silu(z)
     yf = y.astype(jnp.float32)
     y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-6) * p["norm"]).astype(cdt)
-    out = jnp.einsum("be,ed->bd", y, p["w_out"].astype(cdt))
+    out = dense(y, p["w_out"].astype(cdt), pairing=p.get("w_out_pairing"))
     return out[:, None], {"h": h, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}

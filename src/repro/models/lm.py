@@ -50,9 +50,9 @@ class PerfKnobs:
     gemm: str = "xla"  # "xla" | "pallas" | "pallas_paired" — route layer
     # GEMMs (layers.dense) through the K-tiled epilogue-fused Pallas kernel
     # instead of XLA einsums; "pallas_paired" additionally routes every
-    # weight carrying pair_lm_params metadata (attention qkv/out, MLP
-    # up/gate/down) through the *subtractor* kernel, with the sublayer
-    # residual adds fused into the kernel epilogue
+    # weight carrying pair_params metadata (attention/MLA projections, MLP
+    # and MoE-expert up/gate/down, SSM projections) through the *subtractor*
+    # kernel, with the sublayer residual adds fused into the kernel epilogue
     pair_rounding: float = 0.0  # rounding size for the LM pairing artifacts
     # (gemm="pallas_paired"): ServeEngine builds pair_lm_params(params,
     # pair_rounding, mode from pair_block_n) when the params don't already
@@ -314,17 +314,20 @@ def _mla_with_cache(cfg, p, x, positions, knobs):
     """MLA prefill that also emits the compressed (c_kv, k_rope) cache."""
     m = cfg.mla
     cdt = x.dtype
-    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cdt))
+    d = x.shape[-1]
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    c_kv = L.dense(x, p["w_dkv"].astype(cdt), pairing=p.get("w_dkv_pairing"))
     c_kv = L.rms_head_norm(p["kv_norm"], c_kv)
-    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(cdt))
+    k_rope = L.dense(x, p["w_kr"].astype(cdt), pairing=p.get("w_kr_pairing"))
     k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    q = L.dense(x, p["wq"].astype(cdt).reshape(d, H * qk),
+                pairing=p.get("wq_pairing")).reshape(*x.shape[:-1], H, qk)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = L.rope(q_rope, positions, cfg.rope_theta)
     k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(cdt))
     v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(cdt))
-    H = cfg.n_heads
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, m.qk_rope_dim))
     qc = jnp.concatenate([q_nope, q_rope], axis=-1)
     kc = jnp.concatenate([k_nope, k_rope_b], axis=-1)
@@ -332,7 +335,9 @@ def _mla_with_cache(cfg, p, x, positions, knobs):
         qc, kc, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qc.shape[-1] - v.shape[-1]))),
         causal=True, q_chunk=knobs.q_chunk, k_chunk=knobs.k_chunk,
     )[..., : m.v_head_dim]
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    y = L.dense(out.reshape(*out.shape[:-2], H * m.v_head_dim),
+                p["wo"].astype(cdt).reshape(H * m.v_head_dim, d),
+                pairing=p.get("wo_pairing"))
     c_kv_c = constrain(c_kv, "batch", "cache_seq", "kv_lora")
     k_rope_c = constrain(k_rope, "batch", "cache_seq", "head_dim")
     return y, {"c_kv": c_kv_c, "k_rope": k_rope_c}
@@ -355,11 +360,11 @@ def _ssm_with_cache(cfg, p, x, collect_cache):
     cdt = x.dtype
     d_in = s.expand * cfg.d_model
     H = d_in // s.head_dim
-    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(cdt))
-    xi0 = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cdt))
-    Bi0 = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(cdt))
-    Ci0 = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(cdt))
-    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(cdt))
+    z = L.dense(x, p["w_z"].astype(cdt), pairing=p.get("w_z_pairing"))
+    xi0 = L.dense(x, p["w_x"].astype(cdt), pairing=p.get("w_x_pairing"))
+    Bi0 = L.dense(x, p["w_B"].astype(cdt), pairing=p.get("w_B_pairing"))
+    Ci0 = L.dense(x, p["w_C"].astype(cdt), pairing=p.get("w_C_pairing"))
+    dt = L.dense(x, p["w_dt"].astype(cdt), pairing=p.get("w_dt_pairing"))
     xi = L._causal_conv(xi0, p["conv_x"].astype(cdt))
     Bi = L._causal_conv(Bi0, p["conv_B"].astype(cdt))
     Ci = L._causal_conv(Ci0, p["conv_C"].astype(cdt))
@@ -375,7 +380,7 @@ def _ssm_with_cache(cfg, p, x, collect_cache):
     y = y * jax.nn.silu(z)
     yf = y.astype(jnp.float32)
     y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-6) * p["norm"]).astype(cdt)
-    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cdt))
+    out = L.dense(y, p["w_out"].astype(cdt), pairing=p.get("w_out_pairing"))
     W = s.conv_width
     cache = {
         "h": h_last,

@@ -1,0 +1,199 @@
+"""Model-agnostic `pair_params` across the config zoo.
+
+Covers the PR-7 tentpole surface:
+
+* strict no-match behavior — unknown trees / typo'd leaf specs raise with
+  the list of unmatched leaves instead of silently pairing nothing;
+* leaf-classification round-trip — on every toy config family, every
+  pairing the walker emits (decoder, encoder, nested ``moe.shared``, and
+  the ``(L, E, …)`` expert-stacked metadata) reconstructs the live weight
+  exactly at r=0 and packs a valid lane permutation at r>0;
+* the per-expert paired GEMM (`fused_paired_expert_dense`) against its
+  folded-weight oracle on random shapes, shared and per-expert activations.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _proptest import cases, floats, integers, seeds
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core.transform import (
+    _lm_weight_matrix_shape,
+    pair_lm_params,
+    pair_params,
+)
+from repro.kernels.ops import (
+    fold_lm_expert_weight,
+    fold_lm_weight,
+    fused_paired_expert_dense,
+)
+from repro.models import lm as M
+from repro.models.param import unzip
+
+
+def _smoke_params(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# strict no-match raise (the silent-empty-dict fix)
+# ---------------------------------------------------------------------------
+
+
+def test_no_match_tree_raises():
+    """A tree none of whose names match must raise, naming the specs tried."""
+    fake = {"segments": [{"attn_rebranded": {"w_qkv": np.zeros((1, 16, 16))}}]}
+    with pytest.raises(ValueError, match=r"attn.*wq"):
+        pair_lm_params(fake, 0.05)
+
+
+def test_typod_leaf_spec_raises():
+    """An explicit spec list with a typo fails loudly, listing the miss."""
+    _, params = _smoke_params("qwen2-1.5b")
+    bad = (("attn", "wq"), ("mlp", "w_gaet"))
+    with pytest.raises(ValueError, match=r"w_gaet"):
+        pair_params(params, 0.05, leaves=bad)
+
+
+def test_conv_tree_no_match_raises():
+    fake = {"conv1": {"bias_only": np.zeros((6,))}}
+    with pytest.raises(ValueError):
+        pair_params(fake, 0.05)
+
+
+# ---------------------------------------------------------------------------
+# per-family round-trip: exact r=0 fold + valid lane packing at r>0
+# ---------------------------------------------------------------------------
+
+
+def _metadata_entries(pm):
+    """(path, meta, weight, is_expert) for every pairing in a paired tree —
+    reuses the analysis walker so the test sees exactly what CI lints."""
+    from repro.analysis.rules_pairing import _lm_metadata
+
+    return _lm_metadata(pm)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("mode,bn", [("structured", 0), ("per_column", 1)])
+def test_r0_fold_round_trips(arch, mode, bn):
+    """At rounding 0 every emitted pairing folds back to the live weight
+    bit-exactly — all lanes residual, pure permuted gather/scatter."""
+    cfg, params = _smoke_params(arch)
+    pm, rep = pair_params(
+        params, 0.0, mode=mode, leaves=cfg.paired_leaves or None
+    )
+    entries = _metadata_entries(pm)
+    assert len(entries) == len(rep.leaves) > 0
+    for path, meta, arr, is_expert in entries:
+        w_name = path.rsplit(".", 1)[-1][: -len("_pairing")]
+        for layer in range(arr.shape[0]):
+            sl = {k: jnp.asarray(v[layer]) for k, v in meta.items()}
+            if is_expert:
+                w = jnp.asarray(arr[layer])  # (E, K, F)
+                got = fold_lm_expert_weight(w, sl, pair_block_n=bn)
+            else:
+                K, N = _lm_weight_matrix_shape(w_name, arr.shape[1:])
+                w = jnp.asarray(arr[layer]).reshape(K, N)
+                got = fold_lm_weight(w, sl, pair_block_n=bn)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(w), err_msg=f"{path}[{layer}]"
+            )
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_r005_lanes_pack_a_permutation(arch):
+    """At r=0.05 the packed ``[I | J | resid]`` lanes of every block/layer
+    (expert axis included) are a permutation of range(K), and nonzero
+    pairing shows up on every leaf class the family declares."""
+    from repro.analysis.rules_pairing import _lm_artifacts, _valid_lanes
+
+    cfg, params = _smoke_params(arch)
+    pm, rep = pair_params(
+        params, 0.05, mode="per_column", leaves=cfg.paired_leaves or None
+    )
+    assert rep.pair_fraction > 0
+    arts = _lm_artifacts(pm)
+    assert arts
+    for a in arts:
+        I, J, R = _valid_lanes(a)
+        lanes = np.sort(np.concatenate([np.ravel(I), np.ravel(J), np.ravel(R)]))
+        assert np.array_equal(lanes, np.arange(a.K)), a.location
+    if cfg.moe is not None:
+        expert = [
+            lf for lf in rep.leaves
+            if ".moe." in lf.path and ".moe.shared." not in lf.path
+        ]
+        assert expert and all(lf.pair_fraction > 0 for lf in expert)
+
+
+# ---------------------------------------------------------------------------
+# per-expert paired GEMM vs folded oracle (random shapes)
+# ---------------------------------------------------------------------------
+
+
+@cases(6, E=integers(2, 5), K=integers(8, 24), F=integers(4, 16),
+       Mrows=integers(1, 6), bn=integers(0, 3), rounding=floats(0.0, 0.3),
+       per_expert=integers(0, 1), seed=seeds())
+def test_fused_paired_expert_dense_matches_fold(
+    E, K, F, Mrows, bn, rounding, per_expert, seed
+):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(1, E, K, F)).astype(np.float32)
+    fake = {"segments": [{"moe": {"w_gate": W}}]}
+    mode = "column_blocked" if bn else "structured"
+    pm, _ = pair_params(
+        fake, rounding, mode=mode, block_n=bn,
+        leaves=(("moe", "w_gate"),), min_dim=1,
+    )
+    meta = {
+        k: jnp.asarray(v[0])
+        for k, v in pm["segments"][0]["moe"]["w_gate_pairing"].items()
+    }
+    w = jnp.asarray(W[0])
+    xs = (E, Mrows, K) if per_expert else (Mrows, K)
+    x = jnp.asarray(rng.normal(size=xs).astype(np.float32))
+    got = fused_paired_expert_dense(
+        x, w, meta, activation="silu", x_per_expert=bool(per_expert),
+        pair_block_n=bn, interpret=True,
+    )
+    wf = fold_lm_expert_weight(w, meta, pair_block_n=bn)
+    eq = "etk,ekf->tef" if per_expert else "tk,ekf->tef"
+    want = jax.nn.silu(jnp.einsum(eq, x, wf))
+    assert got.shape == (Mrows, E, F)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward parity through the newly-routed families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "deepseek-v2-lite-16b"])
+def test_moe_forward_r0_parity(arch):
+    """Full MoE-family forward (expert kernel + MLA/shared routing) through
+    the paired path at r=0 matches the XLA path ≤ 1e-5."""
+    from repro.kernels.ops import perf_context
+
+    cfg, params = _smoke_params(arch)
+    pm, _ = pair_params(
+        params, 0.0, mode="structured", leaves=cfg.paired_leaves or None
+    )
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(7).integers(0, cfg.vocab, (2, 8)), jnp.int32)}
+    base = M.PerfKnobs(q_chunk=8, k_chunk=8, remat="none")
+    knobs = dataclasses.replace(base, gemm="pallas_paired")
+    want, _, _ = M.lm_forward(cfg, params, batch, knobs=base)
+    with perf_context(knobs):
+        got, _, _ = jax.jit(
+            lambda p: M.lm_forward(cfg, p, batch, knobs=knobs)
+        )(pm)
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert rel <= 1e-5, f"{arch}: rel err {rel:.2e}"
