@@ -24,7 +24,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import fig8, model_zoo, pairing_rate_lm, roofline, table1
+from benchmarks import fig8, model_zoo, pairing_rate_lm, roofline, serving, table1
 from benchmarks.common import write_result
 
 BENCHES = [
@@ -33,6 +33,8 @@ BENCHES = [
     ("lm_paired", "beyond paper: paired LM decode", fig8.run_lm_paired),
     ("pairing_rate_lm", "beyond paper", pairing_rate_lm.run),
     ("model_zoo", "paired path across all ten config families", model_zoo.run),
+    ("serving", "hardened front end: load sweep + chaos, degraded-path parity",
+     serving.run),
     ("roofline", "dry-run analysis", roofline.run),
 ]
 

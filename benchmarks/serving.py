@@ -1,0 +1,243 @@
+"""Load + chaos bench for the hardened serving front end.
+
+Two scenario axes over the paired subtractor engine (qwen2 smoke, fp32,
+``gemm="pallas_paired"`` at rounding 0 — the exact-parity point) with an
+unpaired XLA fallback engine behind it:
+
+1. **Load sweep** — seeded Poisson arrivals at several offered loads through
+   the same front end (length-bucketed admission, chunked prefill, queue
+   timeout).  Reports p50/p99 completion latency, p50/p99 time-to-first-token
+   and tokens/sec (virtual clock — deterministic per seed) per offered load.
+2. **Chaos run** — the same workload with deterministic fault injection:
+   NaN/Inf logits, KV-cache poisoning, kernel launch failures, latency
+   spikes.  The gates, all asserted here (a red bench fails CI):
+
+   - **zero requests lost** — every request ends completed, degraded, or
+     shed with a structured reason;
+   - **every slot-targeted fault accounted** — the request occupying a
+     faulted slot ends degraded-completed or shed, never plain-completed
+     with possibly-garbage tokens;
+   - **r=0 token parity of degraded slots** — every degraded completion's
+     token stream equals the XLA reference engine's greedy decode of the
+     same prompt (graceful degradation means *exact* answers, just slower).
+
+``BENCH_serving.json`` (written by ``benchmarks.run``) carries the summary:
+per-load latency/throughput rows plus the chaos ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, write_result
+from repro.configs import get_smoke_config
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.serving import (
+    FaultEvent,
+    FaultInjector,
+    FrontendConfig,
+    GuardConfig,
+    ServeEngine,
+    ServeFrontend,
+    faulted_request_ids,
+    poisson_workload,
+)
+
+SEED = 0
+BATCH = 4
+MAX_SEQ = 48
+HORIZON_S = 0.6
+PROMPT_LEN = (3, 20)
+NEW_TOKENS = (2, 8)
+LOADS_RPS = (10.0, 25.0, 60.0)
+LOADS_RPS_QUICK = (10.0, 40.0)
+
+_BASE = dict(q_chunk=16, k_chunk=16, remat="none")
+
+
+def _engines(cfg, params):
+    """(primary paired @ r=0, unpaired XLA fallback) — fresh slot state."""
+    primary = ServeEngine(
+        cfg, params, max_seq=MAX_SEQ, batch_size=BATCH,
+        knobs=M.PerfKnobs(**_BASE, gemm="pallas_paired", pair_rounding=0.0))
+    fallback = ServeEngine(
+        cfg, params, max_seq=MAX_SEQ, batch_size=BATCH,
+        knobs=M.PerfKnobs(**_BASE))
+    return primary, fallback
+
+
+def _frontend_cfg() -> FrontendConfig:
+    return FrontendConfig(
+        prefill_chunk=6,
+        queue_timeout_s=1.0,
+        guard=GuardConfig(max_retries=2, quarantine_steps=2),
+    )
+
+
+def _reference_tokens(cfg, params, requests) -> dict[int, list[int]]:
+    """Greedy XLA reference for each request's prompt — the parity oracle."""
+    ref = ServeEngine(cfg, params, max_seq=MAX_SEQ, batch_size=1,
+                      knobs=M.PerfKnobs(**_BASE))
+    out = {}
+    for r in requests:
+        out[r.rid] = ref.generate({0: r.prompt}, n_steps=r.max_new_tokens)[0]
+        ref.release_slot(0)
+    return out
+
+
+def _chaos_schedule(quick: bool) -> FaultInjector:
+    """Deterministic chaos: pinned early-step faults (the load sweep shows
+    the first ~30 steps are saturated, so these provably hit occupied slots)
+    plus a seeded low-rate background draw across the whole run."""
+    pinned = [
+        FaultEvent(step=3, kind="nan_logits", slot=0),
+        FaultEvent(step=5, kind="kv_poison", slot=1),
+        FaultEvent(step=7, kind="inf_logits", slot=2),
+        FaultEvent(step=9, kind="kernel_failure", magnitude=2),
+        FaultEvent(step=11, kind="latency_spike", magnitude=8.0),
+        FaultEvent(step=14, kind="kv_poison", slot=3),
+    ]
+    background = () if quick else FaultInjector.from_rates(
+        SEED + 1, n_steps=256, batch_size=BATCH,
+        rates={"nan_logits": 0.02, "kv_poison": 0.01,
+               "kernel_failure": 0.01, "latency_spike": 0.02},
+        magnitude=2.0,
+    ).events
+    return FaultInjector([*pinned, *background])
+
+
+def run(quick: bool = False) -> dict:
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+
+    # -- load sweep (no faults) ----------------------------------------------
+    loads = LOADS_RPS_QUICK if quick else LOADS_RPS
+    sweep_rows = []
+    for rate in loads:
+        workload = poisson_workload(
+            rate_rps=rate, horizon_s=HORIZON_S, seed=SEED, vocab=cfg.vocab,
+            prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS)
+        primary, fallback = _engines(cfg, params)
+        fe = ServeFrontend(primary, fallback, _frontend_cfg())
+        summary = fe.run(workload, offered_load_rps=rate).summary()
+        assert summary["lost"] == 0, f"load {rate}: lost requests"
+        sweep_rows.append({
+            "offered_rps": rate,
+            "requests": summary["n_requests"],
+            "completed": summary["completed"],
+            "shed": summary["shed"],
+            "p50_s": summary["latency_s"]["p50"],
+            "p99_s": summary["latency_s"]["p99"],
+            "ttft_p50_s": summary["ttft_s"]["p50"],
+            "tok_per_s": summary["tokens_per_s_virtual"],
+        })
+    print(fmt_table(
+        sweep_rows,
+        ["offered_rps", "requests", "completed", "shed", "p50_s", "p99_s",
+         "ttft_p50_s", "tok_per_s"],
+        title="serving load sweep (virtual clock, Poisson arrivals, no faults)",
+    ))
+
+    # -- chaos run -----------------------------------------------------------
+    chaos_rate = loads[-1] / 2
+    workload = poisson_workload(
+        rate_rps=chaos_rate, horizon_s=HORIZON_S, seed=SEED, vocab=cfg.vocab,
+        prompt_len=PROMPT_LEN, new_tokens=NEW_TOKENS)
+    primary, fallback = _engines(cfg, params)
+    faults = _chaos_schedule(quick)
+    fe = ServeFrontend(primary, fallback, _frontend_cfg(), faults=faults)
+    t0 = time.time()
+    report = fe.run(workload, offered_load_rps=chaos_rate)
+    chaos = report.summary()
+    chaos_wall = time.time() - t0
+
+    failures: list[str] = []
+    # gate 1: zero requests lost
+    if chaos["lost"]:
+        failures.append(f"{chaos['lost']} request(s) lost under chaos")
+    # gate 2: every slot-targeted fault ends degraded or cleanly shed
+    faulted = faulted_request_ids(report)
+    if not faulted:
+        failures.append("chaos schedule injected no slot-targeted faults "
+                        "into occupied slots — the gate gated nothing")
+    by_rid = {r.rid: r for r in report.requests}
+    for rid in sorted(faulted):
+        r = by_rid[rid]
+        if r.state == "shed" and not r.shed_reason:
+            failures.append(f"rid {rid}: shed without a structured reason")
+        elif r.state not in ("degraded", "shed"):
+            failures.append(
+                f"rid {rid}: took a numeric fault but ended {r.state!r} — "
+                f"its tokens never went through the exact fallback path")
+    # gate 3: r=0 token parity of every completion vs the XLA reference —
+    # degraded slots (the headline claim) and clean paired slots alike
+    ref_tokens = _reference_tokens(
+        cfg, params,
+        [r for r in report.requests if r.state in ("completed", "degraded")])
+    n_parity = {"completed": 0, "degraded": 0}
+    for r in report.requests:
+        if r.state not in ("completed", "degraded"):
+            continue
+        if r.tokens != ref_tokens[r.rid]:
+            failures.append(
+                f"rid {r.rid} ({r.state}): token stream diverged from the "
+                f"XLA reference at rounding 0")
+        else:
+            n_parity[r.state] += 1
+    if n_parity["degraded"] == 0:
+        failures.append("no request completed on the degraded path — "
+                        "the parity gate gated nothing")
+
+    print(fmt_table(
+        [{
+            "requests": chaos["n_requests"],
+            "completed": chaos["completed"],
+            "degraded": chaos["degraded"],
+            "shed": chaos["shed"],
+            "faulted": len(faulted),
+            "incidents": len(report.incidents),
+            "p99_s": chaos["latency_s"]["p99"],
+        }],
+        ["requests", "completed", "degraded", "shed", "faulted",
+         "incidents", "p99_s"],
+        title=f"chaos run @ {chaos_rate} req/s "
+              f"({len(faults.events)} scheduled fault(s))",
+    ))
+    print(f"[serving] degraded-path parity: {n_parity['degraded']} degraded + "
+          f"{n_parity['completed']} clean completions all match the XLA "
+          f"reference (r=0)")
+
+    payload = {
+        "seed": SEED,
+        "batch": BATCH,
+        "max_seq": MAX_SEQ,
+        "load_sweep": sweep_rows,
+        "chaos": {
+            **chaos,
+            "wall_s": round(chaos_wall, 3),
+            "scheduled_faults": len(faults.events),
+            "fired_faults": len(faults.fired),
+            "faulted_requests": sorted(faulted),
+            "parity_checked": n_parity,
+            "incident_log": report.incidents.as_dicts(),
+        },
+        "failures": failures,
+    }
+    write_result("serving", payload)
+    if failures:
+        raise AssertionError("; ".join(failures))
+    return {
+        "perf_summary": {
+            "load_sweep": sweep_rows,
+            "chaos": {k: v for k, v in payload["chaos"].items()
+                      if k != "incident_log"},
+        }
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,8 @@ import dataclasses as dc
 
 from repro.analysis.core import RuleContext
 
-TARGETS = ("lenet_fused", "lm_decode", "serve_step", "model_zoo")
+TARGETS = ("lenet_fused", "lm_decode", "serve_step", "serve_frontend",
+           "model_zoo")
 
 # paired decode routes exactly the LM_PAIRED_WEIGHTS GEMMs (attention
 # q/k/v/out + MLP gate/up/down) through the subtractor kernel — one HBM
@@ -147,6 +148,54 @@ def build_serve_step() -> RuleContext:
     )
 
 
+def build_serve_frontend() -> RuleContext:
+    """The hardened front end's *degraded* path: the unpaired
+    ``gemm="pallas"`` decode step the numeric watchdog retries quarantined
+    requests on (serving.guards).  Exact arithmetic, no pairing metadata —
+    but the fallback must still be a sane schedule: the seven per-layer
+    GEMMs on the K-tiled Pallas kernel, the two sublayer residual adds
+    standalone (no epilogue fusion to hide them in), no f64 leaks."""
+    import jax
+
+    from repro.kernels.ops import perf_context
+    from repro.models import lm as M
+    from repro.models.param import unzip
+
+    cfg = _smoke_lm_cfg()
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    cache, _ = unzip(M.init_cache(cfg, 2, 32))
+    import jax.numpy as jnp
+
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray([5, 11], jnp.int32)
+    knobs = M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none", gemm="pallas")
+
+    def step(p, c, t, s):
+        with perf_context(knobs):
+            return M.decode_step(cfg, p, c, t, s)
+
+    with perf_context(knobs):
+        jaxpr = jax.make_jaxpr(
+            lambda p, c, t, s: M.decode_step(cfg, p, c, t, s)
+        )(params, cache, tok, pos)
+    hlo = jax.jit(step).lower(params, cache, tok, pos).compile().as_text()
+    return RuleContext(
+        target="serve_frontend",
+        jaxpr=jaxpr,
+        hlo_text=hlo,
+        params=params,
+        hidden_shape=(2, 1, cfg.d_model),
+        expect={
+            # unpaired fallback: same seven GEMM launches per layer as the
+            # paired path (attn q/k/v/out + MLP gate/up/down on the dense
+            # kernel), but the residual adds stay standalone — exactly 2
+            "residual_adds": 2,
+            "writebacks_per_layer": _DECODE_WRITEBACKS_PER_LAYER,
+            "pallas_calls": _DECODE_WRITEBACKS_PER_LAYER,
+        },
+    )
+
+
 def build_model_zoo() -> RuleContext:
     """Pairing metadata of the hardest zoo member (deepseek: MLA latents,
     leading-expert-axis MoE weights, shared experts, a leading dense layer)
@@ -171,6 +220,7 @@ _BUILDERS = {
     "lenet_fused": build_lenet_fused,
     "lm_decode": build_lm_decode,
     "serve_step": build_serve_step,
+    "serve_frontend": build_serve_frontend,
     "model_zoo": build_model_zoo,
 }
 

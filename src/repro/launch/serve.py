@@ -4,6 +4,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --paired-rounding 0.01 --steps 16
 
+    # hardened front end: Poisson load + chaos over the paired engine, with
+    # graceful degradation to the unpaired fallback path
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --gemm pallas_paired --frontend --arrival-rate 20 --horizon 0.5 \
+        --inject nan_logits:0.05,kv_poison:0.02,kernel_failure:0.02
+
 On a real fleet the same `serve_step` lowers against the production mesh
 (see launch/dryrun.py decode cells: cache sequence-sharded over `model`,
 batch over `data`); here the ServeEngine drives it on local devices.
@@ -11,6 +17,7 @@ batch over `data`); here the ServeEngine drives it on local devices.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -65,6 +72,28 @@ def main() -> None:
                     help="path to a persisted kernel TileCache "
                          "(benchmarks/roofline.py writes one); measured "
                          "tile configs there beat the VMEM heuristic")
+    # -- hardened front end (serving.frontend) -------------------------------
+    ap.add_argument("--frontend", action="store_true",
+                    help="drive the engine through the async front end: "
+                         "seeded Poisson arrivals, length-bucketed admission, "
+                         "chunked prefill, numeric watchdog with degradation "
+                         "to the unpaired fallback engine")
+    ap.add_argument("--arrival-rate", type=float, default=10.0,
+                    help="offered load in requests per virtual second")
+    ap.add_argument("--horizon", type=float, default=1.0,
+                    help="arrival window in virtual seconds")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload + fault-schedule seed")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens per monolithic prefill; the tail of "
+                         "longer prompts rides the shared decode steps")
+    ap.add_argument("--deadline", type=float, default=float("inf"),
+                    help="per-request completion deadline (virtual s)")
+    ap.add_argument("--fallback-gemm", choices=("xla", "pallas"), default="xla",
+                    help="unpaired exact path quarantined requests degrade to")
+    ap.add_argument("--inject", default="",
+                    help="fault rates, e.g. 'nan_logits:0.05,kv_poison:0.02' "
+                         "(per front-end step; see serving.faults.FAULT_KINDS)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -97,6 +126,10 @@ def main() -> None:
               f"{len(rp.leaves)} decoder weights "
               f"({100 * rp.pair_fraction:.1f}% of paired-eligible weights); "
               f"residual adds fused into the kernel epilogue")
+    if args.frontend:
+        _run_frontend(args, cfg, params, eng)
+        return
+
     rng = np.random.default_rng(0)
     prompts = {
         i: rng.integers(0, cfg.vocab, size=(8 + 4 * i,)).astype(np.int32)
@@ -109,6 +142,59 @@ def main() -> None:
         print(f"[serve] slot {slot}: prompt {len(prompts[slot])} toks → {toks}")
     print(f"[serve] {args.batch * args.steps} tokens in {dt:.2f}s "
           f"({args.batch * args.steps / dt:.1f} tok/s incl. prefill)")
+
+
+def _parse_fault_rates(spec: str) -> dict[str, float]:
+    rates: dict[str, float] = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        kind, _, rate = part.partition(":")
+        rates[kind] = float(rate or 0.0)
+    return rates
+
+
+def _run_frontend(args, cfg, params, eng: ServeEngine) -> None:
+    """Simulated-load run: Poisson arrivals + optional chaos, degrading to a
+    fresh unpaired fallback engine built from the same (unpaired) weights."""
+    import json
+
+    from repro.serving import (
+        FaultInjector,
+        FrontendConfig,
+        ServeFrontend,
+        poisson_workload,
+    )
+
+    # `params` is the pre-pairing tree (ServeEngine pairs its own copy), so
+    # the fallback engine runs plain exact GEMMs with no metadata siblings
+    fb_knobs = dataclasses.replace(
+        eng.knobs, gemm=args.fallback_gemm, pair_rounding=0.0)
+    fallback = ServeEngine(cfg, params, max_seq=args.max_seq,
+                           batch_size=args.batch, knobs=fb_knobs)
+    workload = poisson_workload(
+        rate_rps=args.arrival_rate, horizon_s=args.horizon, seed=args.seed,
+        vocab=cfg.vocab, prompt_len=(3, max(4, args.max_seq // 4)),
+        new_tokens=(2, max(3, args.steps)),
+    )
+    faults = None
+    rates = _parse_fault_rates(args.inject)
+    if rates:
+        faults = FaultInjector.from_rates(
+            args.seed, n_steps=4096, batch_size=args.batch, rates=rates)
+    fe = ServeFrontend(
+        eng, fallback,
+        FrontendConfig(prefill_chunk=args.prefill_chunk,
+                       deadline_s=args.deadline),
+        faults=faults,
+    )
+    report = fe.run(workload, offered_load_rps=args.arrival_rate)
+    print(f"[serve] front end: {len(workload)} requests @ "
+          f"{args.arrival_rate} req/s over {args.horizon}s "
+          f"({len(report.incidents)} incident records)")
+    print(json.dumps(report.summary(), indent=2))
+    lost = report.lost()
+    if lost:
+        raise SystemExit(f"[serve] LOST {len(lost)} request(s): "
+                         f"{[r.rid for r in lost]}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,27 @@
-"""Serving substrate: batched KV-cache decode engine."""
+"""Serving substrate: batched KV-cache decode engine + the hardened async
+front end (continuous batching, fault injection, numeric watchdog with
+graceful degradation to the unpaired exact path)."""
 
-from repro.serving.engine import ServeEngine  # noqa: F401
+from repro.serving.engine import INACTIVE_TOKEN, CapacityError, ServeEngine  # noqa: F401
+from repro.serving.faults import (  # noqa: F401
+    FAULT_KINDS,
+    SLOT_FAULTS,
+    FaultEvent,
+    FaultInjector,
+    KernelFault,
+)
+from repro.serving.frontend import (  # noqa: F401
+    FrontendConfig,
+    Request,
+    ServeFrontend,
+    ServeReport,
+    faulted_request_ids,
+    poisson_workload,
+)
+from repro.serving.guards import (  # noqa: F401
+    GuardConfig,
+    Incident,
+    IncidentLog,
+    NumericWatchdog,
+    check_logits,
+)

@@ -24,6 +24,20 @@ from repro.models import lm as M
 from repro.models.param import unzip
 
 
+class CapacityError(ValueError):
+    """A request or decode step would exceed the engine's hard bounds.
+
+    Raised instead of letting JAX scatter semantics silently clamp an
+    out-of-range cache write into the last row (which corrupts the newest
+    cached position for the slot without any error).
+    """
+
+
+#: token emitted for slots that are not active — callers must never treat it
+#: as model output (vocab ids are non-negative, so -1 can't collide)
+INACTIVE_TOKEN = -1
+
+
 @dataclasses.dataclass
 class ServeEngine:
     cfg: ModelConfig
@@ -38,6 +52,12 @@ class ServeEngine:
         self.pos = jnp.zeros((self.batch_size,), jnp.int32)
         self.tokens = jnp.zeros((self.batch_size, 1), jnp.int32)
         self.active = np.zeros((self.batch_size,), bool)
+        # slots a numeric watchdog pulled out of service (see serving.guards):
+        # quarantined slots refuse admission until clear_quarantine() runs
+        self.quarantined = np.zeros((self.batch_size,), bool)
+        # decode-step logits of the last step() (host copy, (batch, vocab)) —
+        # what the numeric watchdog inspects for NaN/Inf/overflow
+        self.last_logits: np.ndarray | None = None
 
         # gemm == "pallas_paired" needs per-weight pairing metadata
         # (core.transform.pair_lm_params) next to the decoder weights.  If
@@ -83,9 +103,30 @@ class ServeEngine:
 
     # -- request management -------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray, extras: dict | None = None):
-        """Prefill a prompt into one slot. prompt: (plen,) int32."""
+        """Prefill a prompt into one slot. prompt: (plen,) int32.
+
+        Admission is validated, not asserted: ``assert`` vanishes under
+        ``python -O`` and JAX scatter would then clamp an oversized prompt's
+        cache writes into the last row silently.  Raises :class:`CapacityError`
+        on any bound violation; a quarantined slot refuses admission until
+        :meth:`clear_quarantine`.
+        """
         plen = len(prompt)
-        assert plen < self.max_seq
+        if not 0 <= slot < self.batch_size:
+            raise CapacityError(
+                f"slot {slot} out of range for batch_size={self.batch_size}")
+        if self.active[slot]:
+            raise CapacityError(
+                f"slot {slot} is still active — release_slot() it first")
+        if self.quarantined[slot]:
+            raise CapacityError(
+                f"slot {slot} is quarantined — clear_quarantine() it first")
+        if plen < 1:
+            raise CapacityError("empty prompt")
+        if plen >= self.max_seq:
+            raise CapacityError(
+                f"prompt length {plen} leaves no decode room in "
+                f"max_seq={self.max_seq} (need plen < max_seq)")
         batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
         batch.update(extras or {})
         last_logits, cache = self._prefill(self.params, batch)
@@ -119,13 +160,72 @@ class ServeEngine:
         return next_tok
 
     def step(self, sample: Callable | None = None) -> np.ndarray:
-        """One decode step for every active slot. Returns (batch,) next tokens."""
+        """One decode step for every active slot. Returns (batch,) next tokens.
+
+        Inactive slots emit :data:`INACTIVE_TOKEN` (-1) — finished or evicted
+        sequences stop producing model output.  Raises :class:`CapacityError`
+        when any *active* slot has no cache row left (``pos >= max_seq``)
+        instead of letting the scatter clamp into the last row.
+        """
+        over = self.active & (np.asarray(self.pos) >= self.max_seq)
+        if over.any():
+            raise CapacityError(
+                f"slot(s) {np.flatnonzero(over).tolist()} at pos "
+                f"{np.asarray(self.pos)[over].tolist()} have no cache rows "
+                f"left (max_seq={self.max_seq}) — evict or raise max_seq")
         logits, self.cache = self._decode(self.params, self.cache, self.tokens, self.pos)
         logits = logits[:, 0, : self.cfg.vocab]
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32) if sample is None else sample(logits)
         self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
         self.tokens = nxt[:, None]
-        return np.asarray(nxt)
+        self.last_logits = np.asarray(logits)
+        return np.where(self.active, np.asarray(nxt), INACTIVE_TOKEN)
+
+    def force_token(self, slot: int, token: int) -> None:
+        """Override the next input token for one slot (chunked prefill:
+        the front end feeds the unprefilled tail of a long prompt through
+        the shared decode steps, one token per step, so other slots keep
+        decoding instead of stalling behind a monolithic prefill)."""
+        self.tokens = self.tokens.at[slot, 0].set(int(token))
+
+    def release_slot(self, slot: int, *, scrub: bool = True) -> None:
+        """Evict a slot: mark it free and (by default) scrub its cache rows.
+
+        Scrubbing zeroes every cache entry's ``slot`` row (K/V, MLA latents,
+        SSM state, conv state) so a later request admitted into the slot can
+        never attend stale keys from the previous occupant.
+        """
+        if not 0 <= slot < self.batch_size:
+            raise CapacityError(
+                f"slot {slot} out of range for batch_size={self.batch_size}")
+        self.active[slot] = False
+        self.pos = self.pos.at[slot].set(0)
+        self.tokens = self.tokens.at[slot, 0].set(0)
+        if scrub:
+            self.cache = {
+                "segments": [
+                    {k: v.at[:, slot].set(0) for k, v in seg.items()}
+                    for seg in self.cache["segments"]
+                ]
+            }
+
+    def quarantine_slot(self, slot: int) -> None:
+        """Pull a slot out of service: evict + scrub + refuse admission until
+        :meth:`clear_quarantine`.  The numeric watchdog (serving.guards) calls
+        this when the slot's logits go non-finite; the request itself is the
+        front end's to retry on the degraded path."""
+        self.release_slot(slot, scrub=True)
+        self.quarantined[slot] = True
+
+    def clear_quarantine(self, slot: int) -> None:
+        self.quarantined[slot] = False
+
+    def free_slots(self) -> list[int]:
+        """Slots admission may use right now (inactive and not quarantined)."""
+        return [
+            i for i in range(self.batch_size)
+            if not self.active[i] and not self.quarantined[i]
+        ]
 
     def generate(self, slot_prompts: dict[int, np.ndarray], n_steps: int,
                  extras: dict | None = None) -> dict[int, list[int]]:

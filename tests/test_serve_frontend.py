@@ -1,0 +1,280 @@
+"""Hardened serving front end: continuous batching, chunked prefill,
+fault injection, numeric watchdog, and graceful degradation.
+
+The invariant every test circles: a request either completes with the exact
+greedy token stream a fresh reference engine produces for its prompt, or is
+shed with a structured reason — never lost, never garbage tokens."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.serving import (
+    FaultEvent,
+    FaultInjector,
+    FrontendConfig,
+    GuardConfig,
+    Request,
+    ServeEngine,
+    ServeFrontend,
+    check_logits,
+    faulted_request_ids,
+    poisson_workload,
+)
+
+MAX_SEQ = 32
+BATCH = 2
+_BASE = dict(q_chunk=16, k_chunk=16, remat="none")
+
+
+@pytest.fixture(scope="module")
+def stack():
+    """(cfg, params, primary, fallback) — engines are module-scoped so the
+    jitted step functions compile once; _reset() clears slot state."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    primary = ServeEngine(cfg, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                          knobs=M.PerfKnobs(**_BASE))
+    fallback = ServeEngine(cfg, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                           knobs=M.PerfKnobs(**_BASE))
+    return cfg, params, primary, fallback
+
+
+def _reset(*engines):
+    for eng in engines:
+        for s in range(eng.batch_size):
+            eng.clear_quarantine(s)
+            eng.release_slot(s)
+
+
+def _reference(cfg, params, requests):
+    ref = ServeEngine(cfg, params, max_seq=MAX_SEQ, batch_size=1,
+                      knobs=M.PerfKnobs(**_BASE))
+    out = {}
+    for r in requests:
+        out[r.rid] = ref.generate({0: r.prompt}, n_steps=r.max_new_tokens)[0]
+        ref.release_slot(0)
+    return out
+
+
+def _req(rid, prompt, n, arrival=0.0):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=n, arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
+# workload generation
+# ---------------------------------------------------------------------------
+
+def test_poisson_workload_is_seeded_and_bounded():
+    a = poisson_workload(rate_rps=50, horizon_s=1.0, seed=3, vocab=64,
+                         prompt_len=(2, 9), new_tokens=(1, 5))
+    b = poisson_workload(rate_rps=50, horizon_s=1.0, seed=3, vocab=64,
+                         prompt_len=(2, 9), new_tokens=(1, 5))
+    assert len(a) == len(b) > 10
+    for ra, rb in zip(a, b, strict=True):
+        assert ra.arrival == rb.arrival
+        assert ra.max_new_tokens == rb.max_new_tokens
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert 2 <= ra.plen < 9 and 1 <= ra.max_new_tokens < 5
+        assert 0.0 < ra.arrival <= 1.0
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals)
+
+
+# ---------------------------------------------------------------------------
+# clean load: continuous batching + chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_clean_load_completes_all_with_reference_parity(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    wl = poisson_workload(rate_rps=25, horizon_s=0.4, seed=1, vocab=cfg.vocab,
+                          prompt_len=(3, 18), new_tokens=(2, 5))
+    fe = ServeFrontend(primary, fallback, FrontendConfig(prefill_chunk=5))
+    report = fe.run(wl, offered_load_rps=25)
+
+    assert report.lost() == []
+    summary = report.summary()
+    assert summary["completed"] == len(wl) and summary["shed"] == 0
+    assert summary["latency_s"]["p50"] is not None
+    assert summary["tokens_per_s_virtual"] > 0
+    ref = _reference(cfg, params, report.requests)
+    for r in report.requests:
+        assert r.tokens == ref[r.rid], f"rid {r.rid} diverged"
+        assert r.first_token_time is not None
+        assert r.finish_time >= r.admit_time >= r.arrival
+
+
+def test_chunked_prefill_matches_monolithic_prefill(stack):
+    """A prompt far longer than prefill_chunk rides the shared decode steps
+    one token per step and must still emit exactly the full-prefill stream."""
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, size=(21,)).astype(np.int32)
+    r = _req(0, prompt, 5)
+    fe = ServeFrontend(primary, fallback, FrontendConfig(prefill_chunk=4))
+    report = fe.run([r])
+    assert r.state == "completed"
+    assert r.tokens == _reference(cfg, params, [r])[0]
+
+
+# ---------------------------------------------------------------------------
+# faults → watchdog → degradation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["nan_logits", "inf_logits", "kv_poison"])
+def test_numeric_fault_degrades_to_exact_fallback(stack, kind):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(13)
+    r = _req(0, rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32), 6)
+    faults = FaultInjector([FaultEvent(step=1, kind=kind, slot=0)])
+    fe = ServeFrontend(primary, fallback, FrontendConfig(prefill_chunk=8),
+                       faults=faults)
+    report = fe.run([r])
+
+    assert faulted_request_ids(report) == {0}
+    assert r.state == "degraded" and r.retries == 1
+    assert r.tokens == _reference(cfg, params, [r])[0], \
+        "degraded completion must be token-exact vs the reference"
+    actions = [i.action for i in report.incidents.for_request(0)]
+    assert actions == ["injected", "quarantined", "retried_degraded"]
+    # the quarantined slot sat out, then returned to service
+    assert not primary.quarantined.any()
+
+
+def test_kernel_failure_transient_is_retried_without_loss(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(17)
+    r = _req(0, rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32), 4)
+    faults = FaultInjector([FaultEvent(step=1, kind="kernel_failure",
+                                       magnitude=2)])
+    cfg_fe = FrontendConfig(prefill_chunk=8, max_kernel_retries=3)
+    fe = ServeFrontend(primary, fallback, cfg_fe, faults=faults)
+    report = fe.run([r])
+    assert r.state == "completed" and not r.degraded
+    assert r.tokens == _reference(cfg, params, [r])[0]
+    assert report.incidents.counts() == {"injected:kernel_failure": 1}
+
+
+def test_kernel_failure_exhausted_degrades_active_slots(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(19)
+    reqs = [_req(i, rng.integers(0, cfg.vocab, size=(4 + i,)).astype(np.int32), 4)
+            for i in range(2)]
+    faults = FaultInjector([FaultEvent(step=1, kind="kernel_failure",
+                                       magnitude=10)])
+    cfg_fe = FrontendConfig(prefill_chunk=8, max_kernel_retries=2)
+    fe = ServeFrontend(primary, fallback, cfg_fe, faults=faults)
+    report = fe.run(reqs)
+    assert report.lost() == []
+    ref = _reference(cfg, params, reqs)
+    for r in reqs:
+        assert r.state == "degraded", "persistent launch failure must degrade"
+        assert r.tokens == ref[r.rid]
+
+
+def test_retries_exhausted_sheds_with_structured_reason(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(23)
+    r = _req(0, rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32), 6)
+    faults = FaultInjector([FaultEvent(step=1, kind="nan_logits", slot=0)])
+    cfg_fe = FrontendConfig(prefill_chunk=8,
+                            guard=GuardConfig(max_retries=0))
+    fe = ServeFrontend(primary, fallback, cfg_fe, faults=faults)
+    report = fe.run([r])
+    assert report.lost() == []
+    assert r.state == "shed" and r.shed_reason == "retries_exhausted:nan"
+
+
+# ---------------------------------------------------------------------------
+# admission policy: deadlines, queue bounds, length bucketing
+# ---------------------------------------------------------------------------
+
+def test_deadline_and_too_long_shed_reasons(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(29)
+    too_long = _req(0, rng.integers(0, cfg.vocab, size=(MAX_SEQ - 2,))
+                    .astype(np.int32), 8)
+    fine = _req(1, rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32), 20,
+                arrival=0.0)
+    fe = ServeFrontend(primary, fallback,
+                       FrontendConfig(prefill_chunk=8, deadline_s=0.05,
+                                      step_cost_s=0.01))
+    report = fe.run([too_long, fine])
+    assert report.lost() == []
+    assert too_long.state == "shed" and too_long.shed_reason == "too_long"
+    assert fine.state == "shed" and fine.shed_reason == "deadline"
+    # the deadline shed freed its slot
+    assert not primary.active.any()
+
+
+def test_queue_full_sheds_overflow_arrivals(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    rng = np.random.default_rng(31)
+    reqs = [_req(i, rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32), 3,
+                 arrival=0.0) for i in range(6)]
+    fe = ServeFrontend(primary, fallback,
+                       FrontendConfig(prefill_chunk=8, max_queue=3))
+    report = fe.run(reqs)
+    assert report.lost() == []
+    by = report.by_state()
+    assert [r.shed_reason for r in by["shed"]] == ["queue_full"] * len(by["shed"])
+    assert len(by["shed"]) >= 1
+    assert len(by["completed"]) == len(reqs) - len(by["shed"])
+
+
+def test_length_bucketed_admission_prefers_lead_bucket(stack):
+    cfg, params, primary, fallback = stack
+    _reset(primary, fallback)
+    fe = ServeFrontend(primary, fallback,
+                       FrontendConfig(bucket_width=8, prefill_chunk=8))
+    rng = np.random.default_rng(37)
+    mk = lambda rid, plen, t: _req(  # noqa: E731
+        rid, rng.integers(0, cfg.vocab, size=(plen,)).astype(np.int32),
+        2, arrival=t)
+    # oldest request is short → its bucket (short prompts) admits first even
+    # though a long request arrived in between
+    queue = [mk(0, 3, 0.0), mk(1, 20, 0.001), mk(2, 4, 0.002)]
+    order = fe._bucket_order(queue, now=1.0)
+    assert [r.rid for r in order] == [0, 2, 1]
+
+
+# ---------------------------------------------------------------------------
+# guards unit behavior
+# ---------------------------------------------------------------------------
+
+def test_check_logits_flags_only_active_corrupt_slots():
+    logits = np.zeros((4, 8), np.float32)
+    logits[0, 3] = np.nan
+    logits[1, 1] = np.inf
+    logits[2, 0] = 1e9  # overflow
+    active = np.array([True, True, True, False])
+    flagged = check_logits(logits, active, overflow=1e6)
+    assert flagged == {0: "nan", 1: "inf", 2: "overflow"}
+    # inactive slots never flagged, healthy logits never flagged
+    assert check_logits(logits, np.zeros(4, bool)) == {}
+    assert check_logits(None, active) == {}
+
+
+def test_fault_injector_from_rates_is_deterministic():
+    a = FaultInjector.from_rates(7, n_steps=200, batch_size=4,
+                                 rates={"nan_logits": 0.1, "kv_poison": 0.05})
+    b = FaultInjector.from_rates(7, n_steps=200, batch_size=4,
+                                 rates={"nan_logits": 0.1, "kv_poison": 0.05})
+    assert a.events == b.events and len(a.events) > 5
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultInjector.from_rates(0, 10, 2, rates={"bitrot": 1.0})
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(step=0, kind="bitrot")

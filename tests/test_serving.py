@@ -1,4 +1,6 @@
-"""Serving engine: prefill+decode must agree with teacher-forced forward."""
+"""Serving engine: prefill+decode must agree with teacher-forced forward,
+and the slot lifecycle (admit / evict / quarantine) must enforce hard
+capacity bounds instead of JAX scatter's silent clamping."""
 import dataclasses
 
 import jax
@@ -9,7 +11,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import lm as M
 from repro.models.param import unzip
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import INACTIVE_TOKEN, CapacityError, ServeEngine
 
 
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-2.7b", "hymba-1.5b"])
@@ -80,9 +82,12 @@ def test_pallas_paired_engine_token_parity_and_slot_refill():
     out_pls = eng_pls.generate(dict(prompts), n_steps=4)
     assert out_xla == out_pls, "paired decode diverged from XLA at rounding 0"
 
-    # slot 0 finishes; refill it with a fresh prompt while slot 1 keeps
-    # decoding — positions are data, so no recompile, and parity must hold
+    # slot 0 finishes (explicit release under the slot lifecycle); refill it
+    # with a fresh prompt while slot 1 keeps decoding — positions are data,
+    # so no recompile, and parity must hold
     refill = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    eng_xla.release_slot(0)
+    eng_pls.release_slot(0)
     first_xla = eng_xla.add_request(0, refill)
     first_pls = eng_pls.add_request(0, refill)
     assert first_xla == first_pls
@@ -90,6 +95,111 @@ def test_pallas_paired_engine_token_parity_and_slot_refill():
         nxt_xla = eng_xla.step()
         nxt_pls = eng_pls.step()
         np.testing.assert_array_equal(nxt_xla, nxt_pls)
+
+
+def _mini_engine(max_seq=8, batch_size=2, key=5, **knob_kw):
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(key)))
+    knobs = M.PerfKnobs(q_chunk=16, k_chunk=16, remat="none", **knob_kw)
+    return cfg, params, ServeEngine(cfg, params, max_seq=max_seq,
+                                    batch_size=batch_size, knobs=knobs)
+
+
+def test_add_request_validates_capacity_not_asserts():
+    """Admission bounds are real exceptions (survive `python -O`), typed as
+    CapacityError, for every violation class."""
+    cfg, _, eng = _mini_engine(max_seq=8)
+    rng = np.random.default_rng(0)
+    ok = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)
+
+    with pytest.raises(CapacityError, match="prompt length 8"):
+        eng.add_request(0, rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32))
+    with pytest.raises(CapacityError, match="empty prompt"):
+        eng.add_request(0, ok[:0])
+    with pytest.raises(CapacityError, match="out of range"):
+        eng.add_request(2, ok)
+    eng.add_request(0, ok)
+    with pytest.raises(CapacityError, match="still active"):
+        eng.add_request(0, ok)
+    assert isinstance(CapacityError("x"), ValueError)  # catchable as ValueError
+
+
+def test_step_raises_at_max_seq_instead_of_silent_clamp():
+    """Decoding past max_seq must raise, not let the scatter clamp the write
+    into the last cache row."""
+    cfg, _, eng = _mini_engine(max_seq=6)
+    rng = np.random.default_rng(1)
+    eng.add_request(0, rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32))
+    eng.step()  # writes at pos 4 -> pos 5
+    eng.step()  # writes at pos 5 (== max_seq - 1) -> pos 6
+    with pytest.raises(CapacityError, match="no cache rows left"):
+        eng.step()
+
+
+def test_release_slot_stops_emission_and_scrubs_cache():
+    cfg, _, eng = _mini_engine(max_seq=16)
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+    eng.add_request(0, pa)
+    eng.add_request(1, pb)
+    eng.step()
+    eng.release_slot(0)
+
+    # scrub: every cache entry's slot-0 rows zeroed at release (later decode
+    # steps write one dummy row at pos 0 for inactive slots, but any refill's
+    # prefill splice overwrites it — the refill-hygiene test proves that)
+    for seg in eng.cache["segments"]:
+        for name, arr in seg.items():
+            assert not np.asarray(arr)[:, 0].any(), \
+                f"cache entry {name!r} kept stale rows after release"
+
+    nxt = eng.step()
+    assert nxt[0] == INACTIVE_TOKEN, "released slot must not emit tokens"
+    assert 0 <= nxt[1] < cfg.vocab
+    assert int(np.asarray(eng.pos)[0]) == 0, "released slot's pos must reset"
+
+
+def test_quarantined_slot_refuses_admission_until_cleared():
+    cfg, _, eng = _mini_engine(max_seq=16)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)
+    eng.add_request(0, prompt)
+    eng.quarantine_slot(0)
+    assert eng.free_slots() == [1]
+    with pytest.raises(CapacityError, match="quarantined"):
+        eng.add_request(0, prompt)
+    eng.clear_quarantine(0)
+    assert eng.free_slots() == [0, 1]
+    eng.add_request(0, prompt)  # admissible again
+
+
+@pytest.mark.parametrize("gemm", ["xla", "pallas_paired"])
+def test_quarantine_then_refill_leaks_no_stale_state(gemm):
+    """Slot-refill hygiene: a quarantined-then-refilled slot must produce
+    exactly the tokens a fresh engine produces for the new request — no
+    stale KV rows, positions, or pairing state from the previous occupant —
+    on the XLA and the paired subtractor engines alike."""
+    knob_kw = {"gemm": gemm, "pair_rounding": 0.0} if gemm != "xla" else {}
+    cfg, params, eng = _mini_engine(max_seq=24, key=7, **knob_kw)
+    rng = np.random.default_rng(11)
+    victim = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    bystander = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+    refill = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+
+    eng.add_request(0, victim)
+    eng.add_request(1, bystander)  # keeps decoding across the whole episode
+    for _ in range(2):
+        eng.step()
+    eng.quarantine_slot(0)  # evict + scrub mid-request
+    eng.clear_quarantine(0)
+
+    first = eng.add_request(0, refill)
+    got = [first] + [int(eng.step()[0]) for _ in range(3)]
+
+    fresh = ServeEngine(cfg, params, max_seq=24, batch_size=2, knobs=eng.knobs)
+    want = fresh.generate({0: refill}, n_steps=4)[0]
+    assert got == want, "refilled slot diverged — stale state leaked"
 
 
 def test_two_slot_batch_decodes_independently():
