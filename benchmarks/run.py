@@ -24,7 +24,15 @@ import sys
 import time
 import traceback
 
-from benchmarks import fig8, model_zoo, pairing_rate_lm, roofline, serving, table1
+from benchmarks import (
+    fig8,
+    mesh_decode,
+    model_zoo,
+    pairing_rate_lm,
+    roofline,
+    serving,
+    table1,
+)
 from benchmarks.common import write_result
 
 BENCHES = [
@@ -35,6 +43,8 @@ BENCHES = [
     ("model_zoo", "paired path across all ten config families", model_zoo.run),
     ("serving", "hardened front end: load sweep + chaos, degraded-path parity",
      serving.run),
+    ("mesh_decode", "sharded paired decode: mesh parity + per-shard ledgers",
+     mesh_decode.run),
     ("roofline", "dry-run analysis", roofline.run),
 ]
 

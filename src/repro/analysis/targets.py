@@ -14,7 +14,7 @@ import dataclasses as dc
 from repro.analysis.core import RuleContext
 
 TARGETS = ("lenet_fused", "lm_decode", "serve_step", "serve_frontend",
-           "model_zoo")
+           "model_zoo", "sharded_decode")
 
 # paired decode routes exactly the LM_PAIRED_WEIGHTS GEMMs (attention
 # q/k/v/out + MLP gate/up/down) through the subtractor kernel — one HBM
@@ -196,6 +196,51 @@ def build_serve_frontend() -> RuleContext:
     )
 
 
+def build_sharded_decode() -> RuleContext:
+    """The mesh-sharded paired decode cell (launch.steps.wire_serve_cell):
+    per-TP-shard pairing metadata placed beside its weight shards, pjit'd
+    decode step.  Primary gate: ``hlo/pairing-resharding-in-loop`` must find
+    zero copies/collectives of pairing metadata inside the decode while-loop
+    — the metadata is loop-invariant sharded state, and any reshard there
+    would serialize every decoded token behind a gather.
+
+    Uses a (2, n/2) mesh when the process exposes ≥ 4 devices (CI's
+    mesh-decode job sets ``XLA_FLAGS=--xla_force_host_platform_device_count``)
+    and degrades to (1, n) otherwise — the rule is placement-structural, so
+    it bites at any mesh size."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import wire_serve_cell
+    from repro.models import lm as M
+    from repro.models.param import unzip
+    from repro.parallel.sharding import make_mesh_compat, set_mesh_compat
+
+    cfg = _smoke_lm_cfg()
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    n = jax.device_count()
+    shape = (2, n // 2) if n >= 4 else (1, n)
+    mesh = make_mesh_compat(shape, ("data", "model"))
+    knobs = _paired_knobs()
+    cell = wire_serve_cell(
+        cfg, params, mesh, batch_size=2, max_seq=32, knobs=knobs
+    )
+    cache, _ = unzip(M.init_cache(cfg, 2, 32))
+    cache = jax.tree.map(jax.device_put, cache, cell.c_shard)
+    batch = {
+        "tokens": jnp.zeros((2, 1), jnp.int32),
+        "pos": jnp.asarray([5, 11], jnp.int32),
+    }
+    with set_mesh_compat(mesh):
+        hlo = cell.decode.lower(cell.params, cache, batch).compile().as_text()
+    return RuleContext(
+        target="sharded_decode",
+        hlo_text=hlo,
+        params=cell.params,
+        expect={},
+    )
+
+
 def build_model_zoo() -> RuleContext:
     """Pairing metadata of the hardest zoo member (deepseek: MLA latents,
     leading-expert-axis MoE weights, shared experts, a leading dense layer)
@@ -222,6 +267,7 @@ _BUILDERS = {
     "serve_step": build_serve_step,
     "serve_frontend": build_serve_frontend,
     "model_zoo": build_model_zoo,
+    "sharded_decode": build_sharded_decode,
 }
 
 

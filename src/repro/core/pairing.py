@@ -529,6 +529,110 @@ def pair_rows_blocked(
 
 
 # ---------------------------------------------------------------------------
+# 5. Shard-constrained pairing: rows never pair across a TP shard boundary
+# ---------------------------------------------------------------------------
+
+
+def concat_structured(
+    parts: list[StructuredPairing],
+    offsets: list[int],
+    shape: tuple[int, int],
+) -> StructuredPairing:
+    """Concatenate per-row-shard pairings into one pairing of the full matrix.
+
+    ``parts[s]`` pairs the rows ``[offsets[s], offsets[s] + parts[s].shape[0])``
+    of the (K, N) matrix; indices are rebased to global rows.  Because every
+    part's residual list is sorted and offsets increase, the concatenated
+    residual list stays sorted — downstream consumers (``index_arrays``,
+    ``perm``) rely only on index validity, not ordering, but keeping the
+    invariant makes per-shard slices of the result bit-compare against
+    independently built shard pairings.
+    """
+    N = shape[1]
+    I = np.concatenate([p.I + o for p, o in zip(parts, offsets)]) \
+        if parts else np.zeros(0, np.int64)
+    J = np.concatenate([p.J + o for p, o in zip(parts, offsets)]) \
+        if parts else np.zeros(0, np.int64)
+    resid = np.concatenate([p.resid + o for p, o in zip(parts, offsets)]) \
+        if parts else np.zeros(0, np.int64)
+    Kmat = (
+        np.concatenate([p.Kmat for p in parts], axis=0)
+        if parts else np.zeros((0, N))
+    )
+    W_res = (
+        np.concatenate([p.W_res for p in parts], axis=0)
+        if parts else np.zeros((0, N))
+    )
+    return StructuredPairing(
+        I=I.astype(np.int64), J=J.astype(np.int64), Kmat=Kmat,
+        resid=resid.astype(np.int64), W_res=W_res, shape=shape,
+    )
+
+
+def pair_rows_structured_sharded(
+    W: np.ndarray,
+    rounding: float,
+    *,
+    criterion: str = "rms",
+    row_shards: int = 1,
+) -> StructuredPairing:
+    """:func:`pair_rows_structured` constrained to ``row_shards`` row blocks.
+
+    Tensor-parallel splits of a *contraction*-sharded weight (attention
+    out-projection, MLP down-projection) give each device a contiguous slab
+    of rows; a pair whose two rows live on different devices would need its
+    subtrahend gathered every step.  This variant pairs each row slab
+    independently (exactly what a per-device preprocessor would build from
+    its local shard) and rebases indices, so slicing the result at shard
+    boundaries reproduces the standalone per-shard pairings bit for bit.
+
+    ``row_shards`` that don't divide K fall back to the unsharded pairing —
+    the same degradation rule ``parallel.sharding`` applies to the weight.
+    """
+    W = np.asarray(W, dtype=np.float64)
+    K, _ = W.shape
+    if row_shards <= 1 or K % row_shards:
+        return pair_rows_structured(W, rounding, criterion=criterion)
+    step = K // row_shards
+    offsets = [s * step for s in range(row_shards)]
+    parts = [
+        pair_rows_structured(W[o : o + step], rounding, criterion=criterion)
+        for o in offsets
+    ]
+    return concat_structured(parts, offsets, shape=W.shape)
+
+
+def pair_rows_blocked_sharded(
+    W: np.ndarray,
+    rounding: float,
+    block_n: int,
+    *,
+    criterion: str = "rms",
+    row_shards: int = 1,
+) -> BlockedPairing:
+    """:func:`pair_rows_blocked` with every block's rows shard-constrained.
+
+    Column sharding needs no constraint here: blocks are column-local, so a
+    column-parallel split that lands on block boundaries simply partitions
+    the block list — each shard's blocks are identical to what that shard
+    would build from its local columns (asserted by the mesh-decode bench).
+    """
+    W = np.asarray(W, dtype=np.float64)
+    assert W.ndim == 2, "pair_rows_blocked_sharded expects (K, N)"
+    _, N = W.shape
+    assert block_n >= 1, f"block_n must be >= 1, got {block_n}"
+    block_n = min(block_n, N)
+    blocks = [
+        pair_rows_structured_sharded(
+            W[:, lo : min(lo + block_n, N)], rounding,
+            criterion=criterion, row_shards=row_shards,
+        )
+        for lo in range(0, N, block_n)
+    ]
+    return BlockedPairing(blocks=blocks, block_n=block_n, shape=W.shape)
+
+
+# ---------------------------------------------------------------------------
 # Op accounting (Table I of the paper)
 # ---------------------------------------------------------------------------
 

@@ -31,7 +31,9 @@ from repro.core.pairing import (
     fold_columns,
     pair_columns,
     pair_rows_blocked,
+    pair_rows_blocked_sharded,
     pair_rows_structured,
+    pair_rows_structured_sharded,
 )
 
 
@@ -43,6 +45,15 @@ class LeafReport:
     n_pairs: int
     pair_fraction: float  # fraction of weights absorbed into pairs (2P/K·N)
     pairing: ColumnPairing | StructuredPairing | BlockedPairing | None = None
+    # shard-aware builds (pair_params(shards=…)): how the leaf's GEMM view was
+    # split and the per-shard ledger — per-column-equivalent pairs owned by
+    # each column shard (col_shards > 1) or each row shard (row_shards > 1),
+    # summed over layers.  sum(shard_pairs) == n_pairs by construction; the
+    # mesh-decode bench additionally checks each entry against a standalone
+    # pairing of that shard's weight slice.
+    row_shards: int = 1
+    col_shards: int = 1
+    shard_pairs: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass
@@ -402,6 +413,135 @@ def _pair_conv_tree(
     return out, report
 
 
+def _structured_shard_ledger(
+    pairings: list[StructuredPairing], row_shards: int
+) -> tuple[int, ...]:
+    """Per-row-shard weighted pair counts (both rows of a shard-constrained
+    pair live in the same shard, so attribution by I is exact)."""
+    out = np.zeros(row_shards, np.int64)
+    for sp in pairings:
+        step = sp.shape[0] // row_shards
+        if len(sp.I):
+            idx = np.minimum(np.asarray(sp.I, np.int64) // step, row_shards - 1)
+            out += np.bincount(idx, minlength=row_shards) * sp.shape[1]
+    return tuple(int(x) for x in out)
+
+
+def _blocked_shard_ledger(
+    pairings: list[BlockedPairing], row_shards: int, col_shards: int
+) -> tuple[int, ...] | None:
+    """Per-shard weighted pair counts of a blocked build, summed over layers.
+
+    Column shards own contiguous runs of blocks (the alignment check in
+    ``pair_stack`` guarantees block boundaries land on shard boundaries);
+    with only row shards, pairs are attributed by which row slab they
+    live in.
+    """
+    if col_shards > 1:
+        out = np.zeros(col_shards, np.int64)
+        for bp in pairings:
+            per = bp.n_blocks // col_shards
+            for b, sp in enumerate(bp.blocks):
+                out[min(b // per, col_shards - 1)] += sp.n_pairs * sp.shape[1]
+        return tuple(int(x) for x in out)
+    if row_shards > 1:
+        out = np.zeros(row_shards, np.int64)
+        for bp in pairings:
+            step = bp.shape[0] // row_shards
+            for sp in bp.blocks:
+                if len(sp.I):
+                    idx = np.minimum(
+                        np.asarray(sp.I, np.int64) // step, row_shards - 1
+                    )
+                    out += np.bincount(idx, minlength=row_shards) * sp.shape[1]
+        return tuple(int(x) for x in out)
+    return None
+
+
+def tp_shard_plan(
+    param_axes: Any,
+    params: Any,
+    mesh,
+    rules,
+    *,
+    leaves: tuple[tuple[str, str], ...] | None = None,
+) -> dict[tuple[str, str], tuple[int, int]]:
+    """(row_shards, col_shards) of every paired leaf's per-layer GEMM view.
+
+    Resolves each eligible weight's logical axes against (mesh, rules) —
+    the same ``spec_for_axes`` call that will place the weight — and counts
+    how many ways the GEMM's contraction rows and output columns are split.
+    A split only counts when it is the *leading* dim of the flattened view
+    (contiguous chunks; a sharded trailing dim like head_dim would interleave
+    and cannot express a contiguous row/column split — such leaves stay at 1,
+    which is always safe: unconstrained metadata is correct everywhere, it
+    just loses shard locality).  Leaves that appear with conflicting splits
+    (e.g. an encoder head count that doesn't divide where the decoder's does)
+    degrade to (1, 1).
+
+    Feed the result to ``pair_params(shards=…)`` so pairing never crosses a
+    shard boundary of the mesh the decode will run on.
+    """
+    from repro.parallel.sharding import spec_for_axes
+
+    def mesh_size(entry) -> int:
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        return size
+
+    specs = tuple(leaves) if leaves is not None else DEFAULT_PAIRED_LEAVES
+    plan: dict[tuple[str, str], tuple[int, int]] = {}
+
+    def scan_segments(ax_segments: list, val_segments: list) -> None:
+        for ax_seg, val_seg in zip(ax_segments, val_segments, strict=True):
+            for sub_path, w_name in specs:
+                ax_sub = _resolve_sub(ax_seg, sub_path)
+                val_sub = _resolve_sub(val_seg, sub_path)
+                if ax_sub is None or val_sub is None or w_name not in ax_sub:
+                    continue
+                w_axes = ax_sub[w_name]
+                shape = tuple(getattr(val_sub[w_name], "shape", ()))
+                if not isinstance(w_axes, tuple) or len(w_axes) != len(shape):
+                    continue
+                nd = len(shape)
+                expert = sub_path.split(".")[-1] == "moe" and nd == 4
+                mat0 = 2 if expert else 1
+                if nd <= mat0:
+                    continue
+                spec = spec_for_axes(
+                    w_axes, mesh=mesh, rules=rules, dim_sizes=shape
+                )
+                if w_name == "wo":
+                    row_dims = list(range(mat0, nd - 1))
+                    col_dims = [nd - 1]
+                else:
+                    row_dims = [mat0]
+                    col_dims = list(range(mat0 + 1, nd))
+
+                def split(dims, spec=spec):
+                    lead = spec[dims[0]]
+                    if lead is None or any(spec[d] is not None for d in dims[1:]):
+                        return 1
+                    return mesh_size(lead)
+
+                rc = (split(row_dims), split(col_dims))
+                key = (sub_path, w_name)
+                if key in plan and plan[key] != rc:
+                    plan[key] = (1, 1)
+                else:
+                    plan[key] = rc
+
+    scan_segments(
+        param_axes.get("segments", []), params.get("segments", [])
+    )
+    ax_enc, val_enc = param_axes.get("encoder"), params.get("encoder")
+    if isinstance(ax_enc, dict) and isinstance(val_enc, dict):
+        scan_segments(ax_enc.get("segments", []), val_enc.get("segments", []))
+    return plan
+
+
 def pair_params(
     params: Any,
     rounding: float,
@@ -411,6 +551,7 @@ def pair_params(
     leaves: tuple[tuple[str, str], ...] | None = None,
     criterion: str = "rms",
     min_dim: int = 8,
+    shards: Any = None,
 ) -> tuple[Any, PairedModelReport]:
     """Pairing artifacts for every eligible weight of *any* param tree.
 
@@ -446,6 +587,18 @@ def pair_params(
     shared-row pairing per matrix), ``"column_blocked"`` (one per
     ``block_n`` output columns), or ``"per_column"`` (sugar for
     ``block_n=1`` — the paper's Algorithm 1).
+
+    ``shards`` (optional) makes the build *shard-aware*: a mapping from
+    ``(sub_path, weight_name)`` to ``(row_shards, col_shards)`` of the
+    leaf's per-layer GEMM view (:func:`tp_shard_plan` derives one from a
+    mesh + rule table).  Row shards constrain the pairing so no pair spans a
+    contraction-shard boundary (each tensor-parallel device's metadata is
+    exactly what it would build from its local rows); column shards are
+    checked for block alignment (a shard boundary must not split a pairing
+    block — misaligned leaves degrade to an unsharded build) and drive the
+    per-shard ledger in each :class:`LeafReport`.  Shard counts that don't
+    divide the leaf's dims degrade to 1, mirroring the replication fallback
+    of ``parallel.sharding.spec_for_axes``.
     """
     if mode == "per_column":
         mode, block_n = "column_blocked", 1
@@ -462,16 +615,44 @@ def pair_params(
     matched: set[tuple[str, str]] = set()
     leaves_report: list[LeafReport] = []
 
-    def pair_stack(mats: np.ndarray) -> tuple[dict[str, np.ndarray], int]:
-        """Pair a (n, K, N) stack → (stacked metadata, weighted pair count)."""
+    def pair_stack(
+        mats: np.ndarray, row_shards: int = 1, col_shards: int = 1
+    ) -> tuple[dict[str, np.ndarray], int, tuple[int, ...] | None, int, int]:
+        """Pair a (n, K, N) stack → (stacked metadata, weighted pair count,
+        per-shard ledger, effective row/col shards)."""
+        K, N = int(mats.shape[1]), int(mats.shape[2])
+        rs = row_shards if row_shards > 1 and K % row_shards == 0 else 1
+        cs = col_shards if col_shards > 1 and N % col_shards == 0 else 1
         if mode == "column_blocked":
+            bn = min(block_n, N)
+            if cs > 1 and (N // cs) % bn:
+                cs = 1  # a shard boundary would split a block — keep whole
             ps_b = [
-                pair_rows_blocked(m, rounding, block_n, criterion=criterion)
+                pair_rows_blocked_sharded(
+                    m, rounding, bn, criterion=criterion, row_shards=rs
+                )
                 for m in mats
             ]
-            return _stack_blocked(ps_b), sum(p.weighted_pairs for p in ps_b)
-        ps_s = [pair_rows_structured(m, rounding, criterion=criterion) for m in mats]
-        return _stack_structured(ps_s), sum(p.weighted_pairs for p in ps_s)
+            return (
+                _stack_blocked(ps_b),
+                sum(p.weighted_pairs for p in ps_b),
+                _blocked_shard_ledger(ps_b, rs, cs),
+                rs, cs,
+            )
+        # structured: pairs are whole rows, so a *column* split never cuts
+        # them — only the contraction (row) axis needs the shard constraint
+        ps_s = [
+            pair_rows_structured_sharded(
+                m, rounding, criterion=criterion, row_shards=rs
+            )
+            for m in mats
+        ]
+        return (
+            _stack_structured(ps_s),
+            sum(p.weighted_pairs for p in ps_s),
+            _structured_shard_ledger(ps_s, rs) if rs > 1 else None,
+            rs, 1,
+        )
 
     def pair_segments(segments: list, prefix: str) -> list:
         new_segs = []
@@ -493,8 +674,13 @@ def pair_params(
                 K, N = _lm_weight_matrix_shape(w_name, mat_shape)
                 if K < min_dim or N < min_dim:
                     continue
+                want_rs, want_cs = (1, 1)
+                if shards is not None:
+                    want_rs, want_cs = shards.get((sub_path, w_name), (1, 1))
                 mats = arr.reshape(-1, K, N).astype(np.float64)
-                meta, n_pairs = pair_stack(mats)
+                meta, n_pairs, shard_pairs, rs, cs = pair_stack(
+                    mats, want_rs, want_cs
+                )
                 if expert:
                     E = arr.shape[1]
                     meta = {
@@ -510,6 +696,9 @@ def pair_params(
                         n_weights=int(mats.size),
                         n_pairs=int(n_pairs),
                         pair_fraction=2.0 * n_pairs / mats.size,
+                        row_shards=rs,
+                        col_shards=cs,
+                        shard_pairs=shard_pairs,
                     )
                 )
             new_segs.append(new_seg)
@@ -559,6 +748,7 @@ def pair_lm_params(
     block_n: int = 0,
     criterion: str = "rms",
     min_dim: int = 8,
+    shards: Any = None,
 ) -> tuple[Any, PairedModelReport]:
     """Backward-compatible LM entry point: :func:`pair_params` in auto mode.
 
@@ -568,7 +758,7 @@ def pair_lm_params(
     """
     return pair_params(
         params, rounding, mode=mode, block_n=block_n,
-        criterion=criterion, min_dim=min_dim,
+        criterion=criterion, min_dim=min_dim, shards=shards,
     )
 
 

@@ -35,7 +35,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import wire_cell
 from repro.models.lm import PerfKnobs
 from repro.parallel.hlo import analyze, xla_cost_analysis
-from repro.parallel.sharding import set_mesh_compat
+from repro.parallel.sharding import record_spec_fallbacks, set_mesh_compat
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
 
@@ -74,17 +74,21 @@ def run_cell(
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     try:
-        cell = wire_cell(
-            cfg, mesh,
-            seq_len=shape.seq_len,
-            global_batch=shape.global_batch,
-            mode=shape.kind,
-            knobs=knobs,
-        )
-        with set_mesh_compat(mesh):
-            lowered = cell.lower()
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
+        # every spec_for_axes replication fallback taken while wiring +
+        # lowering this cell (divisibility, mesh-axis contention) lands in
+        # the record — silent degradation is a config bug until audited
+        with record_spec_fallbacks() as fallbacks:
+            cell = wire_cell(
+                cfg, mesh,
+                seq_len=shape.seq_len,
+                global_batch=shape.global_batch,
+                mode=shape.kind,
+                knobs=knobs,
+            )
+            with set_mesh_compat(mesh):
+                lowered = cell.lower()
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
@@ -139,6 +143,10 @@ def run_cell(
                 "xla_bytes_unscaled": cost.get("bytes accessed", 0.0),
             },
             "collectives": coll,
+            "sharding_fallbacks": [
+                {"axis": axis, "reason": reason, "count": count}
+                for (axis, reason), count in fallbacks.items()
+            ],
             "analysis": {
                 "errors": len(lint.errors()),
                 "findings": [f.as_dict() for f in lint.findings],

@@ -13,12 +13,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels.ops import perf_context
+from repro.core.transform import has_lm_pairing, pair_params, tp_shard_plan
+from repro.kernels.ops import paired_mode_of, perf_context
 from repro.launch.inputs import batch_logical_axes, batch_specs
 from repro.models import lm as M
-from repro.models.param import unzip
+from repro.models.param import pairing_axes, unzip
 from repro.parallel.rules import rules_for
-from repro.parallel.sharding import Rules, activate, shardings_for, spec_for_axes
+from repro.parallel.sharding import (
+    Rules,
+    activate,
+    paired_shardings_for,
+    shardings_for,
+    spec_for_axes,
+)
 from repro.train.optimizer import Optimizer, adamw
 
 
@@ -67,14 +74,9 @@ def abstract_opt_state(opt: Optimizer, param_shapes):
 
 def opt_state_axes(param_axes, opt_state_shapes):
     """Optimizer state shards exactly like its parameter (moments are
-    elementwise)."""
-
-    def like(sub):
-        if isinstance(sub, dict) and set(sub) >= {"m", "v"}:
-            return {k: param_axes for k in sub}
-        return {k: param_axes for k in sub}
-
-    return like(opt_state_shapes)
+    elementwise): every top-level state slot — adamw's m/v, sgd's mom —
+    mirrors the param axes tree."""
+    return {k: param_axes for k in opt_state_shapes}
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +131,72 @@ def build_serve_step(cfg: ModelConfig, mesh, rules: Rules,
 
 
 @dataclasses.dataclass
+class ServeCell:
+    """A concrete, sharded decode cell: paired + device_put params, jitted
+    decode/prefill steps, and the shardings they were placed with."""
+
+    params: Any
+    decode: Any  # jit'd serve_step(params, cache, {"tokens", "pos"})
+    prefill: Any  # jit'd prefill_step(params, batch)
+    p_shard: Any
+    c_shard: Any
+    rules: Rules
+    pair_report: Any
+
+
+def wire_serve_cell(
+    cfg: ModelConfig,
+    params: Any,
+    mesh,
+    *,
+    batch_size: int,
+    max_seq: int,
+    knobs: M.PerfKnobs = M.DEFAULT_KNOBS,
+    rules: Rules | None = None,
+) -> ServeCell:
+    """Wire a *concrete* decode cell against a mesh.
+
+    This is where the shard-aware pairing pieces meet: the weight leaves are
+    resolved against (mesh, rules) to a TP shard plan
+    (``core.transform.tp_shard_plan``), pairing is built per shard
+    (``pair_params(shards=…)`` — no pair crosses a shard boundary), the
+    ``"<name>_pairing"`` siblings get axes (``models.param.pairing_axes``)
+    and placements derived from their weight's resolved spec
+    (``parallel.sharding.paired_shardings_for``), and the decode step is
+    jitted with metadata pinned beside its weight shards — so the decode
+    while-loop never reshards pairing metadata.
+    """
+    rules = rules or rules_for(cfg, "decode", mesh)
+    _, param_axes = abstract_params(cfg)
+    report = None
+    if knobs.gemm == "pallas_paired" and not has_lm_pairing(params):
+        mode, block_n = paired_mode_of(knobs)
+        plan = tp_shard_plan(
+            param_axes, params, mesh, rules, leaves=cfg.paired_leaves
+        )
+        params, report = pair_params(
+            params, knobs.pair_rounding, mode=mode, block_n=block_n,
+            leaves=cfg.paired_leaves, shards=plan,
+        )
+    paxes = pairing_axes(params, param_axes)
+    p_shard = paired_shardings_for(paxes, mesh, rules, params)
+    params = jax.tree.map(jax.device_put, params, p_shard)
+    cache_shapes, cache_axes = abstract_cache(cfg, batch_size, max_seq)
+    c_shard = shardings_for(cache_axes, mesh, rules, cache_shapes)
+    decode = jax.jit(
+        build_serve_step(cfg, mesh, rules, knobs),
+        in_shardings=(p_shard, c_shard, None),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+    prefill = jax.jit(
+        build_prefill_step(cfg, knobs, mesh, rules),
+        in_shardings=(p_shard, None),
+    )
+    return ServeCell(params, decode, prefill, p_shard, c_shard, rules, report)
+
+
+@dataclasses.dataclass
 class LoweredCell:
     jitted: Any
     arg_shapes: tuple
@@ -167,12 +235,10 @@ def wire_cell(
         opt = adamw(1e-4, weight_decay=0.1)
         opt_shapes = abstract_opt_state(opt, param_shapes)
         p_shard = shardings_for(param_axes, mesh, rules, param_shapes)
-        o_shard = jax.tree.map(
-            lambda s: s,  # placeholder; replaced below by zipped map
-            opt_shapes,
-        )
-        # optimizer moments shard like their params
-        o_shard = {k: p_shard for k in opt_shapes}
+        # optimizer moments shard like their params: resolve the state's own
+        # axes tree rather than hand-copying param shardings
+        o_axes = opt_state_axes(param_axes, opt_shapes)
+        o_shard = shardings_for(o_axes, mesh, rules, opt_shapes)
         step_fn = build_train_step(cfg, opt, knobs, mesh, rules)
         bspecs = batch_specs(cfg, global_batch, seq_len, "train")
         bshard = batch_shardings("train", bspecs)

@@ -655,10 +655,12 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int) -> dict:
                 )
             else:
                 KH, hd = cfg.n_kv_heads, cfg.head_dim
-                window = cfg.sliding_window if kind == "hybrid_swa" else 0
-                Sc = min(S, window + cfg.meta_tokens + 1) if window else S
-                # sliding-window layers only keep a window-sized ring... kept
-                # full-length here for correctness (ring buffer is a perf TODO)
+                # hybrid_swa layers get the same full-length (S) cache as
+                # every other attention layer: the decode scatter writes at
+                # absolute positions, so a window-sized ring buffer needs a
+                # modular write index + rotated attention mask that do not
+                # exist yet.  When that lands, allocate
+                # min(S, window + meta_tokens + 1) rows here instead.
                 Sc = S
                 for name in ("k", "v"):
                     entry[name] = Param(

@@ -36,6 +36,49 @@ def unzip(tree: Any) -> tuple[Any, Any]:
     return values, axes
 
 
+PAIRING_META_AXIS = "pairing_meta"
+
+
+def _meta_axes_for(leaf: Any, stacked: bool) -> tuple[str, ...]:
+    nd = len(getattr(leaf, "shape", ()))
+    if stacked and nd:
+        return ("layers",) + (PAIRING_META_AXIS,) * (nd - 1)
+    return (PAIRING_META_AXIS,) * nd
+
+
+def pairing_axes(values: Any, axes: Any) -> Any:
+    """Axes tree for a *paired* value tree.
+
+    Mirrors ``axes`` (the :func:`unzip` axes of the unpaired params) onto the
+    paired tree produced by ``core.transform.pair_params``: every
+    ``"<name>_pairing"`` sibling dict gains axes tuples — ``"layers"`` on the
+    stacked layer dim (when the sibling weight is layer-stacked) and
+    :data:`PAIRING_META_AXIS` on every other dim — so the paired values and
+    the returned axes share a treedef.  The base rule tables map
+    ``"pairing_meta"`` to ``None`` (replicated is always a *correct*
+    placement); ``parallel.sharding.paired_shardings_for`` then overrides the
+    block axis of each metadata leaf from its sibling weight's resolved spec
+    so metadata lands on the same device as the weight shard it indexes.
+    """
+    if isinstance(values, dict):
+        out = {}
+        for k, v in values.items():
+            if k.endswith("_pairing") and not (
+                isinstance(axes, dict) and k in axes
+            ):
+                w_axes = axes.get(k[: -len("_pairing")]) if isinstance(axes, dict) else None
+                stacked = isinstance(w_axes, tuple) and w_axes[:1] == ("layers",)
+                out[k] = jax.tree.map(
+                    lambda leaf, s=stacked: _meta_axes_for(leaf, s), v
+                )
+            else:
+                out[k] = pairing_axes(v, axes[k])
+        return out
+    if isinstance(values, list | tuple):
+        return type(values)(pairing_axes(v, a) for v, a in zip(values, axes))
+    return axes
+
+
 def stack_params(trees: list[Any]) -> Any:
     """Stack a list of identical Param trees along a new leading "layers" axis
     (for lax.scan over a segment of identical layers)."""

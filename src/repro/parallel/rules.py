@@ -53,6 +53,10 @@ def rules_for(cfg: ModelConfig, mode: str, mesh: jax.sharding.Mesh) -> Rules:
         "frames": None,
         "seq": None,
         "cache_seq": None,
+        # pairing-metadata lane dims never shard by rule — the block axis of
+        # a "<name>_pairing" sibling copies the *weight's* resolved spec in
+        # sharding.paired_shardings_for, so metadata rides with its shard.
+        "pairing_meta": None,
     }
 
     if mode == "train":

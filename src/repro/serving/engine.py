@@ -45,6 +45,13 @@ class ServeEngine:
     max_seq: int
     batch_size: int
     knobs: M.PerfKnobs = M.DEFAULT_KNOBS
+    #: optional (mesh, rules) — when a mesh is given the engine becomes the
+    #: distributed variant: params are paired *per TP shard* and placed with
+    #: their pairing metadata beside the weight shards, the cache is
+    #: sequence-sharded, and the decode/prefill steps are pjit'd
+    #: (launch.steps.wire_serve_cell).  Same slot machinery either way.
+    mesh: object = None
+    rules: object = None
 
     def __post_init__(self):
         cache_tree = M.init_cache(self.cfg, self.batch_size, self.max_seq)
@@ -58,6 +65,25 @@ class ServeEngine:
         # decode-step logits of the last step() (host copy, (batch, vocab)) —
         # what the numeric watchdog inspects for NaN/Inf/overflow
         self.last_logits: np.ndarray | None = None
+
+        if self.mesh is not None:
+            from repro.launch.steps import wire_serve_cell
+
+            cell = wire_serve_cell(
+                self.cfg, self.params, self.mesh,
+                batch_size=self.batch_size, max_seq=self.max_seq,
+                knobs=self.knobs, rules=self.rules,
+            )
+            self.params = cell.params
+            self.rules = cell.rules
+            self.pair_report = cell.pair_report
+            self.cache = jax.tree.map(jax.device_put, self.cache, cell.c_shard)
+            self._cell = cell
+            self._decode = lambda p, c, t, pos: cell.decode(
+                p, c, {"tokens": t, "pos": pos}
+            )
+            self._prefill = cell.prefill
+            return
 
         # gemm == "pallas_paired" needs per-weight pairing metadata
         # (core.transform.pair_lm_params) next to the decoder weights.  If

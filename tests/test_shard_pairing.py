@@ -1,0 +1,232 @@
+"""Shard-boundary pairing math: per-shard builds, ledgers, degradation.
+
+The invariant the mesh decode rests on: a shard-aware pairing is *exactly*
+the concatenation of standalone pairings of each shard's weight slice — so
+every TP device's metadata equals what it would build from its local rows,
+and per-shard ledgers sum to the whole.
+"""
+import numpy as np
+
+from repro.core.pairing import (
+    pair_rows_blocked,
+    pair_rows_blocked_sharded,
+    pair_rows_structured,
+    pair_rows_structured_sharded,
+)
+from repro.core.transform import pair_params, tp_shard_plan
+from repro.parallel.sharding import Rules
+
+
+def _pairable(rng, K, N, noise=0.01):
+    """Matrix where row 2i+1 ≈ -row 2i, shuffled so pairs cross slab
+    boundaries — unsharded pairing finds ~K/2 pairs, most of which a
+    shard-constrained build must reject or re-find locally."""
+    base = rng.normal(size=(K // 2, N))
+    W = np.empty((K, N))
+    W[0::2] = base
+    W[1::2] = -base + noise * rng.normal(size=base.shape)
+    return W[rng.permutation(K)]
+
+
+class TestStructuredSharded:
+    def test_equals_slab_concat(self):
+        rng = np.random.default_rng(0)
+        W = _pairable(rng, 64, 32)
+        rs = 4
+        step = 64 // rs
+        got = pair_rows_structured_sharded(W, 0.1, row_shards=rs)
+        parts = [
+            pair_rows_structured(W[s * step:(s + 1) * step], 0.1)
+            for s in range(rs)
+        ]
+        assert len(got.I) == sum(len(p.I) for p in parts)
+        # every pair is slab-local with rebased global indices
+        assert np.array_equal(
+            np.asarray(got.I) // step, np.asarray(got.J) // step
+        )
+        exp_resid = np.concatenate(
+            [np.asarray(p.resid) + s * step for s, p in enumerate(parts)]
+        )
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(got.resid)), np.sort(exp_resid)
+        )
+
+    def test_shard_constraint_costs_pairs(self):
+        rng = np.random.default_rng(1)
+        W = _pairable(rng, 64, 32)
+        full = pair_rows_structured(W, 0.1)
+        sharded = pair_rows_structured_sharded(W, 0.1, row_shards=4)
+        assert 0 < len(sharded.I) < len(full.I)
+
+    def test_degrades_when_not_dividing(self):
+        rng = np.random.default_rng(2)
+        W = _pairable(rng, 64, 32)
+        a = pair_rows_structured_sharded(W, 0.1, row_shards=3)  # 64 % 3 != 0
+        b = pair_rows_structured(W, 0.1)
+        np.testing.assert_array_equal(np.asarray(a.I), np.asarray(b.I))
+        np.testing.assert_array_equal(np.asarray(a.J), np.asarray(b.J))
+
+
+class TestBlockedSharded:
+    def test_equals_slab_concat_per_block(self):
+        rng = np.random.default_rng(3)
+        W = _pairable(rng, 32, 16)
+        rs, bn, step = 2, 4, 16
+        got = pair_rows_blocked_sharded(W, 0.1, bn, row_shards=rs)
+        ref = pair_rows_blocked(W, 0.1, bn)
+        assert got.n_blocks == ref.n_blocks
+        for b, sp in enumerate(got.blocks):
+            cols = slice(b * bn, (b + 1) * bn)
+            parts = [
+                pair_rows_structured(W[s * step:(s + 1) * step, cols], 0.1)
+                for s in range(rs)
+            ]
+            assert sp.n_pairs == sum(p.n_pairs for p in parts)
+            if sp.n_pairs:
+                assert np.array_equal(
+                    np.asarray(sp.I) // step, np.asarray(sp.J) // step
+                )
+
+    def test_row_shards_one_is_plain_blocked(self):
+        rng = np.random.default_rng(4)
+        W = _pairable(rng, 32, 16)
+        a = pair_rows_blocked_sharded(W, 0.1, 1, row_shards=1)
+        b = pair_rows_blocked(W, 0.1, 1)
+        assert a.weighted_pairs == b.weighted_pairs
+        for sa, sb in zip(a.blocks, b.blocks, strict=True):
+            np.testing.assert_array_equal(np.asarray(sa.I), np.asarray(sb.I))
+
+
+def _fake_lm(rng, L=2, K=32, N=16):
+    """Minimal stacked tree pair_params accepts: one segment, one attn leaf."""
+    wq = np.stack([_pairable(rng, K, N) for _ in range(L)]).astype(np.float32)
+    return {"segments": [{"attn": {"wq": wq, "wo": np.transpose(wq, (0, 2, 1))}}]}
+
+
+class TestPairParamsShards:
+    def test_shards_none_is_baseline(self):
+        rng = np.random.default_rng(5)
+        tree = _fake_lm(rng)
+        pm0, rep0 = pair_params(tree, 0.05, mode="per_column")
+        pm1, rep1 = pair_params(tree, 0.05, mode="per_column", shards=None)
+        import jax
+
+        for a, b in zip(
+            jax.tree.leaves(pm0), jax.tree.leaves(pm1), strict=True
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for lr in rep0.leaves:
+            assert (lr.row_shards, lr.col_shards) == (1, 1)
+            assert lr.shard_pairs is None
+
+    def test_ledger_sums_and_col_split_invariance(self):
+        rng = np.random.default_rng(6)
+        tree = _fake_lm(rng)
+        shards = {("attn", "wq"): (1, 4), ("attn", "wo"): (2, 1)}
+        pm, rep = pair_params(tree, 0.05, mode="per_column", shards=shards)
+        base, rep0 = pair_params(tree, 0.05, mode="per_column")
+        by = {lr.path: lr for lr in rep.leaves}
+        by0 = {lr.path: lr for lr in rep0.leaves}
+        wq = by["segments[0].attn.wq"]
+        assert (wq.row_shards, wq.col_shards) == (1, 4)
+        assert sum(wq.shard_pairs) == wq.n_pairs
+        # a block-aligned column split never constrains per-column pairing:
+        # identical metadata and total to the unsharded build
+        assert wq.n_pairs == by0["segments[0].attn.wq"].n_pairs
+        np.testing.assert_array_equal(
+            np.asarray(pm["segments"][0]["attn"]["wq_pairing"]["I"]),
+            np.asarray(base["segments"][0]["attn"]["wq_pairing"]["I"]),
+        )
+        wo = by["segments[0].attn.wo"]
+        assert (wo.row_shards, wo.col_shards) == (2, 1)
+        assert sum(wo.shard_pairs) == wo.n_pairs
+        assert wo.n_pairs <= by0["segments[0].attn.wo"].n_pairs
+
+    def test_misaligned_col_split_degrades(self):
+        rng = np.random.default_rng(7)
+        tree = _fake_lm(rng)  # N = 16 columns
+        pm, rep = pair_params(
+            tree, 0.05, mode="column_blocked", block_n=3,
+            shards={("attn", "wq"): (1, 4)},  # 16/4 = 4 cols/shard, 4 % 3 != 0
+        )
+        wq = next(lr for lr in rep.leaves if lr.path.endswith("wq"))
+        assert wq.col_shards == 1
+
+    def test_non_dividing_row_shards_degrade(self):
+        rng = np.random.default_rng(8)
+        tree = _fake_lm(rng)  # wo has K = 16 rows
+        _, rep = pair_params(
+            tree, 0.05, mode="per_column", shards={("attn", "wo"): (3, 1)}
+        )
+        wo = next(lr for lr in rep.leaves if lr.path.endswith("wo"))
+        assert wo.row_shards == 1 and wo.shard_pairs is None
+
+
+class _FakeMesh:
+    """spec_for_axes/tp_shard_plan/rules_for only read mesh.shape and
+    mesh.axis_names — enough to exercise multi-way splits in a
+    single-device test process."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+class TestTpShardPlan:
+    def _pieces(self):
+        import dataclasses as dc
+
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import lm as M
+        from repro.models.param import unzip
+
+        cfg = dc.replace(get_smoke_config("qwen2-1.5b"), dtype="float32")
+        params, axes = unzip(M.init_lm(cfg, jax.random.key(0)))
+        return cfg, params, axes
+
+    def test_plan_matches_decode_rules(self):
+        from repro.parallel.rules import rules_for
+
+        cfg, params, axes = self._pieces()
+        mesh = _FakeMesh({"data": 2, "model": 4})
+        rules = rules_for(cfg, "decode", mesh)
+        plan = tp_shard_plan(axes, params, mesh, rules, leaves=cfg.paired_leaves)
+        # column-parallel projections split columns; contraction-parallel
+        # ones split rows; the smoke config's 2 kv heads don't divide 4
+        assert plan[("attn", "wq")] == (1, 4)
+        assert plan[("attn", "wk")] == (1, 1)
+        assert plan[("attn", "wo")] == (4, 1)
+        assert plan[("mlp", "w_gate")] == (1, 4)
+        assert plan[("mlp", "w_down")] == (4, 1)
+
+    def test_replicating_rules_give_unit_plan(self):
+        cfg, params, axes = self._pieces()
+        mesh = _FakeMesh({"data": 2, "model": 4})
+        rules = Rules({})
+        plan = tp_shard_plan(axes, params, mesh, rules, leaves=cfg.paired_leaves)
+        assert all(rc == (1, 1) for rc in plan.values())
+
+
+def test_swa_cache_keeps_full_length():
+    """Regression for the shadowed ``Sc`` in ``init_cache``: hybrid_swa
+    segments deliberately allocate the same full-length (max_seq +
+    meta_tokens) K/V rows as full-attention segments — the decode scatter
+    writes absolute positions, there is no ring buffer.  Pin it so a future
+    ring-buffer change has to update this on purpose."""
+    from repro.configs import get_smoke_config
+    from repro.launch.steps import abstract_cache
+    from repro.models import lm as M
+
+    cfg = get_smoke_config("hymba-1.5b")
+    assert cfg.sliding_window, "hymba smoke must exercise hybrid_swa"
+    max_seq = 24
+    S = max_seq + cfg.meta_tokens
+    kinds = [k for k, _ in M.segment_kinds(cfg)]
+    assert "hybrid_swa" in kinds
+    cache, _ = abstract_cache(cfg, 2, max_seq)
+    for kind, seg in zip(kinds, cache["segments"], strict=True):
+        if "k" in seg:
+            assert seg["k"].shape[2] == S, (kind, seg["k"].shape)
+            assert seg["v"].shape[2] == S, (kind, seg["v"].shape)
