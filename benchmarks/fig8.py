@@ -316,7 +316,13 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
       policy contains **zero** standalone residual adds over the hidden
       state (the ``h + attn(x)`` / ``h + mlp(x)`` skip connections execute
       inside the kernel's residual-add epilogue), while the XLA trace of the
-      same step keeps them as separate ops.
+      same step keeps them as separate ops;
+    * **fused attention** — an engine with ``attn="pallas_fused"`` on top of
+      the paired GEMMs (decode attention computed in VMEM and fed straight
+      into the paired out-projection epilogue, QKV as one concatenated
+      subtractor launch) holds the same r=0 token parity on the same
+      mixed-length batch, and its traced ``decode_step`` audits at **5**
+      kernel writebacks per decoder layer (down from 7 unfused).
     """
     import dataclasses as dc
 
@@ -350,11 +356,25 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
     eng_p = ServeEngine(cfg, params, max_seq=32, batch_size=2,
                         knobs=M.PerfKnobs(**base, gemm="pallas_paired",
                                           pair_rounding=0.0))
+    # fused decode attention riding the same paired engine: per-column
+    # (block_n=1) pairing so the QKV projections fuse into one concatenated
+    # subtractor launch and the attended output feeds the out-projection
+    # epilogue without the HBM round-trip
+    eng_f = ServeEngine(cfg, params, max_seq=32, batch_size=2,
+                        knobs=M.PerfKnobs(**base, gemm="pallas_paired",
+                                          pair_rounding=0.0, pair_block_n=1,
+                                          attn="pallas_fused"))
     out_x = eng_x.generate({k: v for k, v in prompts.items()}, steps)
     out_p = eng_p.generate({k: v for k, v in prompts.items()}, steps)
+    out_f = eng_f.generate({k: v for k, v in prompts.items()}, steps)
     token_identical = out_x == out_p
     assert token_identical, (
         f"paired decode diverged from XLA at rounding 0: {out_p} vs {out_x}"
+    )
+    fused_token_identical = out_x == out_f
+    assert fused_token_identical, (
+        f"fused-attention decode diverged from XLA at rounding 0 on the "
+        f"mixed-length batch: {out_f} vs {out_x}"
     )
 
     # --- ledger: pairing rates on the trained weights ----------------------
@@ -404,12 +424,31 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
         # 7 = the paired GEMMs per layer (attn q/k/v/out + MLP gate/up/down)
         {"residual_adds": 0, "writebacks_per_layer": 7},
     )
+    # same paired step with the fused attention policy on top: the q·K /
+    # softmax / ·V writebacks and the separate out-projection launch collapse
+    # into one kernel, so the per-layer writeback budget drops 7 → 5
+    knobs_f = dc.replace(knobs_p, attn="pallas_fused")
+    rep_fused = audit(
+        "lm_decode_fused_attn", pm, knobs_f,
+        {"residual_adds": 0, "writebacks_per_layer": 5},
+    )
     rep_xla = audit("lm_decode_xla", params, M.PerfKnobs(**base), {})
     resid_adds_paired = rep_paired.measured("schedule/standalone-residual-adds")
     resid_adds_xla = rep_xla.measured("schedule/standalone-residual-adds")
     assert not rep_paired.errors(), (
         f"paired decode violates the schedule rules: "
         f"{[f.as_dict() for f in rep_paired.errors()]}"
+    )
+    assert not rep_fused.errors(), (
+        f"fused-attention decode violates the schedule rules: "
+        f"{[f.as_dict() for f in rep_fused.errors()]}"
+    )
+    fused_writebacks = rep_fused.measured(
+        "schedule/writebacks-per-decode-layer")
+    assert fused_writebacks == 5, (
+        f"fused-attention decode must run exactly 5 kernel writebacks per "
+        f"layer (fused QKV + fused attn/out-proj + 3 MLP), measured "
+        f"{fused_writebacks}"
     )
     assert resid_adds_xla > 0, (
         "audit is vacuous: the XLA trace shows no residual adds to fuse"
@@ -423,6 +462,7 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
         "parity": {
             "rounding": 0.0,
             "token_identical": bool(token_identical),
+            "fused_attn_token_identical": bool(fused_token_identical),
             "tokens": {int(k): v for k, v in out_p.items()},
         },
         "ledger": {"rounding": LM_HEADLINE_ROUNDING, "rates": rates},
@@ -433,6 +473,7 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
             "paired_writebacks_per_layer": int(
                 rep_paired.measured("schedule/writebacks-per-decode-layer")
             ),
+            "fused_attn_writebacks_per_layer": int(fused_writebacks),
         },
     }
     out["perf_summary"] = {
@@ -441,11 +482,14 @@ def lm_paired_decode_bench(quick: bool = False) -> dict:
         "residual_audit": out["residual_audit"],
     }
     print(f"LM paired decode [{cfg.name}] @ r=0: token-identical to XLA over "
-          f"{steps} steps × 2 mixed-length slots")
+          f"{steps} steps × 2 mixed-length slots "
+          f"(fused-attn engine: {fused_token_identical})")
     print("LM pairing ledger @ r=0.05 (trained weights): " + ", ".join(
         f"{tag}={r['pair_rate']:.3f}" for tag, r in rates.items()))
     print(f"residual-add audit: paired trace {resid_adds_paired} standalone "
-          f"adds (XLA trace {resid_adds_xla})")
+          f"adds (XLA trace {resid_adds_xla}); writebacks/layer "
+          f"{out['residual_audit']['paired_writebacks_per_layer']} unfused → "
+          f"{fused_writebacks} with fused decode attention")
     return out
 
 

@@ -14,12 +14,18 @@ import dataclasses as dc
 from repro.analysis.core import RuleContext
 
 TARGETS = ("lenet_fused", "lm_decode", "serve_step", "serve_frontend",
-           "model_zoo", "sharded_decode")
+           "fused_attn_decode", "model_zoo", "sharded_decode")
 
 # paired decode routes exactly the LM_PAIRED_WEIGHTS GEMMs (attention
 # q/k/v/out + MLP gate/up/down) through the subtractor kernel — one HBM
 # writeback each per layer
 _DECODE_WRITEBACKS_PER_LAYER = 7
+
+# with attn="pallas_fused" the three QKV projections concatenate into one
+# subtractor launch and the attention + out-projection + residual fuse into
+# the decode-attention kernel: qkv + attn·out + MLP gate/up/down — the
+# attended values never reach HBM between attention and the out-projection
+_FUSED_DECODE_WRITEBACKS_PER_LAYER = 5
 
 
 def _paired_knobs():
@@ -114,6 +120,44 @@ def build_lm_decode() -> RuleContext:
             "residual_adds": 0,
             "writebacks_per_layer": _DECODE_WRITEBACKS_PER_LAYER,
             "pallas_calls": _DECODE_WRITEBACKS_PER_LAYER,  # all inside the scan
+        },
+    )
+
+
+def build_fused_attn_decode() -> RuleContext:
+    """The fused-attention paired decode step (``attn="pallas_fused"``):
+    the decode-attention kernel consumes the KV cache and applies the
+    paired out-projection + sublayer residual in its flush, and the q|k|v
+    projections run as one concatenated subtractor launch — five HBM
+    writebacks per scanned layer instead of the unfused seven, with the
+    attended values never materialized in HBM."""
+    import jax
+
+    from repro.kernels.ops import perf_context
+    from repro.models import lm as M
+
+    cfg, pm, cache, tok, pos, knobs = _paired_lm_pieces()
+    knobs = dc.replace(knobs, attn="pallas_fused")
+
+    def step(p, c, t, s):
+        with perf_context(knobs):
+            return M.decode_step(cfg, p, c, t, s)
+
+    with perf_context(knobs):
+        jaxpr = jax.make_jaxpr(
+            lambda p, c, t, s: M.decode_step(cfg, p, c, t, s)
+        )(pm, cache, tok, pos)
+    hlo = jax.jit(step).lower(pm, cache, tok, pos).compile().as_text()
+    return RuleContext(
+        target="fused_attn_decode",
+        jaxpr=jaxpr,
+        hlo_text=hlo,
+        params=pm,
+        hidden_shape=(2, 1, cfg.d_model),
+        expect={
+            "residual_adds": 0,
+            "writebacks_per_layer": _FUSED_DECODE_WRITEBACKS_PER_LAYER,
+            "pallas_calls": _FUSED_DECODE_WRITEBACKS_PER_LAYER,
         },
     )
 
@@ -266,6 +310,7 @@ _BUILDERS = {
     "lm_decode": build_lm_decode,
     "serve_step": build_serve_step,
     "serve_frontend": build_serve_frontend,
+    "fused_attn_decode": build_fused_attn_decode,
     "model_zoo": build_model_zoo,
     "sharded_decode": build_sharded_decode,
 }

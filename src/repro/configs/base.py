@@ -202,20 +202,26 @@ def default_paired_leaves(
     moe: bool = False,
     moe_shared: bool = False,
     ssm: bool = False,
+    xattn: bool = False,
 ) -> tuple[tuple[str, str], ...]:
     """The pairing-eligible leaf specs for a family, by block type.
 
     Each entry is ``(sub-path, weight-name)`` into a decoder/encoder layer
     dict; dotted sub-paths (``"moe.shared"``) address nested blocks.  Router,
-    embedding, cross-attention, conv-scan, and the MLA up-projections
-    (``w_uk``/``w_uv`` — absorbed into latent einsums, never a plain GEMM)
-    are deliberately not pairing-eligible.
+    embedding, conv-scan, and the MLA up-projections (``w_uk``/``w_uv`` —
+    absorbed into latent einsums, never a plain GEMM) are deliberately not
+    pairing-eligible.  ``xattn`` (enc-dec families) declares the
+    cross-attention wq/wo projections, which route through ``layers.dense``;
+    the cross wk/wv run once over the encoder output at prefill and stay
+    plain einsums, so they are not declared.
     """
     leaves: list[tuple[str, str]] = []
     if mla:
         leaves += [("attn", "wq"), ("attn", "w_dkv"), ("attn", "w_kr"), ("attn", "wo")]
     elif attn:
         leaves += [("attn", "wq"), ("attn", "wk"), ("attn", "wv"), ("attn", "wo")]
+    if xattn:
+        leaves += [("xattn", "wq"), ("xattn", "wo")]
     if mlp:
         leaves += [("mlp", "w_gate"), ("mlp", "w_up"), ("mlp", "w_down")]
     if moe:

@@ -19,7 +19,7 @@ def config() -> ModelConfig:
         act="gelu",
         rope_theta=0.0,  # whisper uses absolute (sinusoidal) positions, no rope
         tie_embeddings=True,
-        paired_leaves=default_paired_leaves(),
+        paired_leaves=default_paired_leaves(xattn=True),
     )
 
 
@@ -38,5 +38,5 @@ def smoke_config() -> ModelConfig:
         act="gelu",
         rope_theta=0.0,
         tie_embeddings=True,
-        paired_leaves=default_paired_leaves(),
+        paired_leaves=default_paired_leaves(xattn=True),
     )

@@ -218,15 +218,19 @@ LM_PAIRED_WEIGHTS: tuple[tuple[str, str], ...] = (
 # Model-agnostic superset of pairing-eligible leaf specs across the model
 # zoo: dense GQA projections, the MLA down-projections (wq/w_dkv/w_kr/wo —
 # w_uk/w_uv stay absorbed in latent einsums), per-expert MoE weights (the
-# leading-expert-axis batched GEMMs), shared experts (nested sub-path), and
-# the Mamba in/out projections.  ``pair_params`` intersects this with what a
-# tree actually carries unless the caller pins an explicit ``leaves=`` list
-# (``ModelConfig.paired_leaves``).  Embeddings, norms, biases, routers,
-# cross-attention, and the conv-scan kernels are deliberately absent: they
-# are not plain GEMMs or never route through ``layers.dense``.
+# leading-expert-axis batched GEMMs), shared experts (nested sub-path), the
+# Mamba in/out projections, and the enc-dec cross-attention wq/wo (which
+# route through ``layers.dense``; the cross wk/wv run once over the encoder
+# output at prefill as plain einsums and stay unpaired).  ``pair_params``
+# intersects this with what a tree actually carries unless the caller pins
+# an explicit ``leaves=`` list (``ModelConfig.paired_leaves``).  Embeddings,
+# norms, biases, routers, and the conv-scan kernels are deliberately absent:
+# they are not plain GEMMs or never route through ``layers.dense``.
 DEFAULT_PAIRED_LEAVES: tuple[tuple[str, str], ...] = LM_PAIRED_WEIGHTS + (
     ("attn", "w_dkv"),
     ("attn", "w_kr"),
+    ("xattn", "wq"),
+    ("xattn", "wo"),
     ("moe", "w_gate"),
     ("moe", "w_up"),
     ("moe", "w_down"),

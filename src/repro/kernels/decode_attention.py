@@ -1,0 +1,309 @@
+"""Pallas TPU kernel: single-token decode attention fused into the paired
+out-projection.
+
+The decode step is the memory-bound half of serving: one query row per slot
+attends over the KV cache, and before this kernel existed the attended
+values round-tripped HBM between the attention einsums and the paired
+out-projection subtractor kernel — the one non-paired gap left in the decode
+schedule (ROADMAP "Close the attention gap").  This kernel closes it: the
+online softmax runs in fp32 VMEM scratch, and the flush step applies the
+out-projection's column-blocked subtractor arithmetic *inside the kernel* —
+``y[b] = (o[I]-o[J])·kmat + o[resid]·w_res (+ residual)`` — so the attended
+vector is never materialized in HBM.  The ``residual=`` epilogue matches the
+paired GEMM kernel's: an fp32 add in VMEM, no standalone residual add op.
+
+Geometry: grid ``(B, nk)`` with the KV-chunk axis innermost (sequential —
+the (m, l, acc) scratch carries across chunks of one slot's cache).  GQA is
+handled by reshaping the query row to ``(KH, G, D)`` in-kernel; scores and
+probabilities batch over KV heads on the MXU.  Masking matches
+``layers._block_mask`` decode semantics exactly: keys at ``pk <= pos``,
+restricted to the sliding window ``pk > pos - window`` when one is set, with
+the first ``n_sink`` (meta-token) positions always visible.  Chunks fully
+outside the mask are skipped via ``pl.when`` without touching the MXU.
+
+The subtractor difference ``o[I] - o[J]`` here operates on the fp32
+VMEM-resident attended values: unlike the standalone paired GEMM (whose
+activations arrive from HBM at input precision, pinned with
+``reduce_precision``), the attended vector never exists at storage precision,
+so the kernel casts it once to the I/O dtype before the projection to keep
+the arithmetic aligned with the unfused reference path.
+
+The index gather in the flush uses ``jnp.take`` on the flattened attended
+vector; on real hardware this folds into a one-hot MXU contraction (the same
+trick the im2col path uses), which interpret mode models exactly.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import _SCRATCH, _pad_axis
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KH, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+    n_sink: int = 0,
+) -> jax.Array:
+    """XLA reference for the attention half (mirrors
+    ``layers.decode_attention``) — the custom-VJP backward differentiates
+    this instead of the kernel."""
+    B, _, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    G = H // KH
+    qg = q[:, 0].reshape(B, KH, G, D).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k) * (1.0 / math.sqrt(D))
+    pk = jnp.arange(S)[None, None, None, :]
+    p_ = pos[:, None, None, None]
+    ok = pk <= p_
+    if window:
+        in_w = pk > p_ - window
+        if n_sink:
+            in_w = in_w | (pk < n_sink)
+        ok = ok & in_w
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _decode_attn_kernel(
+    *refs,
+    scale: float,
+    window: int,
+    n_sink: int,
+    k_chunk: int,
+    nk: int,
+    KH: int,
+    G: int,
+    n_cols: int,
+    proj: bool,
+    has_residual: bool,
+    io_dtype,
+):
+    it = iter(refs)
+    q_ref, k_ref, v_ref, pos_ref = next(it), next(it), next(it), next(it)
+    if proj:
+        i_ref, j_ref, r_ref = next(it), next(it), next(it)
+        km_ref, wr_ref = next(it), next(it)
+    resid_ref = next(it) if has_residual else None
+    o_ref, m_ref, l_ref, acc_ref = next(it), next(it), next(it), next(it)
+
+    ki = pl.program_id(1)
+    pos = pos_ref[0]
+    base = ki * k_chunk
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # chunk liveness: some key in [base, base+k_chunk) passes the mask
+    live = base <= pos
+    if window:
+        hi = base + k_chunk - 1 > pos - window
+        if n_sink:
+            hi |= base < n_sink
+        live &= hi
+
+    @pl.when(live)
+    def _compute():
+        D = q_ref.shape[-1]
+        q = q_ref[0].astype(jnp.float32).reshape(KH, G, D)
+        kt = k_ref[0].astype(jnp.float32).transpose(1, 0, 2)  # (KH, C, D)
+        vt = v_ref[0].astype(jnp.float32).transpose(1, 0, 2)
+        s = jax.lax.dot_general(
+            q, kt, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (KH, G, C)
+        pk = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        ok = pk <= pos
+        if window:
+            in_w = pk > pos - window
+            if n_sink:
+                in_w |= pk < n_sink
+            ok &= in_w
+        s = jnp.where(ok, s, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, vt, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o = acc_ref[...] / l[..., None]  # (KH, G, D) fp32
+        if not proj:
+            o_ref[0] = o.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+            return
+        # paired out-projection, still in VMEM: gather the flattened
+        # attended vector by the frozen [I | J | resid] metadata and
+        # contract each column block against its subtractor segments
+        of = o.reshape(-1).astype(io_dtype).astype(jnp.float32)  # (H·D,)
+        oi = jnp.take(of, i_ref[...], axis=0)  # (Bw, Pmax)
+        oj = jnp.take(of, j_ref[...], axis=0)
+        orr = jnp.take(of, r_ref[...], axis=0)  # (Bw, Rmax)
+        km = km_ref[...].astype(jnp.float32)  # (Bw, Pmax, bn)
+        wr = wr_ref[...].astype(jnp.float32)  # (Bw, Rmax, bn)
+        y = jnp.einsum("bp,bpn->bn", oi - oj, km,
+                       preferred_element_type=jnp.float32)
+        y += jnp.einsum("br,brn->bn", orr, wr,
+                        preferred_element_type=jnp.float32)
+        y = y.reshape(-1)[:n_cols]
+        if has_residual:
+            # fused skip connection: fp32 add in VMEM, no standalone add op
+            y += resid_ref[0].astype(jnp.float32)
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+def _grid_pieces(q, k_cache, v_cache, pos, k_chunk):
+    B, _, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    if H % KH != 0:
+        raise ValueError(
+            f"GQA requires query heads to divide evenly over kv heads: "
+            f"H={H}, KH={KH}"
+        )
+    k_chunk = min(k_chunk, S)
+    nk = -(-S // k_chunk)
+    k_cache = _pad_axis(k_cache, 1, nk * k_chunk)
+    v_cache = _pad_axis(v_cache, 1, nk * k_chunk)
+    pos = pos.astype(jnp.int32)
+    return B, H, D, KH, H // KH, S, k_chunk, nk, k_cache, v_cache, pos
+
+
+def decode_attention_fwd(
+    q: jax.Array,  # (B, 1, H, D) one post-rope query row per slot
+    k_cache: jax.Array,  # (B, S, KH, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # (B,) int32 current position of each slot
+    *,
+    window: int = 0,
+    n_sink: int = 0,
+    k_chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bare fused decode attention: returns the attended (B, 1, H, D) rows.
+
+    Same kernel as :func:`fused_decode_attention` minus the out-projection —
+    the parity surface the tests pin against ``layers.decode_attention``.
+    """
+    (B, H, D, KH, G, S, k_chunk, nk,
+     k_cache, v_cache, pos) = _grid_pieces(q, k_cache, v_cache, pos, k_chunk)
+    kernel = functools.partial(
+        _decode_attn_kernel,
+        scale=1.0 / math.sqrt(D), window=window, n_sink=n_sink,
+        k_chunk=k_chunk, nk=nk, KH=KH, G=G, n_cols=0,
+        proj=False, has_residual=False, io_dtype=q.dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        name="fused_attn_decode",
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, k_chunk, KH, D), lambda b, ki: (b, ki, 0, 0)),
+            pl.BlockSpec((1, k_chunk, KH, D), lambda b, ki: (b, ki, 0, 0)),
+            pl.BlockSpec((1,), lambda b, ki: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            _SCRATCH((KH, G), jnp.float32),
+            _SCRATCH((KH, G), jnp.float32),
+            _SCRATCH((KH, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q[:, 0], k_cache, v_cache, pos)
+    return out[:, None]
+
+
+def fused_decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KH, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # (B,) int32
+    idx_i: jax.Array,  # (Bw, Pmax) int32 blocked pair lanes of the out-proj
+    idx_j: jax.Array,  # (Bw, Pmax) int32
+    idx_r: jax.Array,  # (Bw, Rmax) int32 residual lanes
+    kmat: jax.Array,  # (Bw, Pmax, bn) masked pair magnitudes (W[I]-W[J])/2
+    w_res: jax.Array,  # (Bw, Rmax, bn) masked residual weights
+    residual: jax.Array | None,  # (B, n_cols) fused skip connection
+    *,
+    n_cols: int,
+    out_dtype=None,
+    window: int = 0,
+    n_sink: int = 0,
+    k_chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode attention + paired out-projection in one launch → (B, n_cols).
+
+    The attended values live only in VMEM scratch; the single HBM writeback
+    per slot is the projected (and residual-added) output row.
+    """
+    (B, H, D, KH, G, S, k_chunk, nk,
+     k_cache, v_cache, pos) = _grid_pieces(q, k_cache, v_cache, pos, k_chunk)
+    Bw, Pmax = idx_i.shape
+    Rmax = idx_r.shape[1]
+    bn = kmat.shape[-1]
+    assert Bw * bn >= n_cols, (Bw, bn, n_cols)
+    has_residual = residual is not None
+    if out_dtype is None:
+        out_dtype = residual.dtype if has_residual else q.dtype
+    kernel = functools.partial(
+        _decode_attn_kernel,
+        scale=1.0 / math.sqrt(D), window=window, n_sink=n_sink,
+        k_chunk=k_chunk, nk=nk, KH=KH, G=G, n_cols=n_cols,
+        proj=True, has_residual=has_residual, io_dtype=q.dtype,
+    )
+    full2 = pl.BlockSpec((Bw, Pmax), lambda b, ki: (0, 0))
+    full2r = pl.BlockSpec((Bw, Rmax), lambda b, ki: (0, 0))
+    in_specs = [
+        pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+        pl.BlockSpec((1, k_chunk, KH, D), lambda b, ki: (b, ki, 0, 0)),
+        pl.BlockSpec((1, k_chunk, KH, D), lambda b, ki: (b, ki, 0, 0)),
+        pl.BlockSpec((1,), lambda b, ki: (b,)),
+        full2, full2, full2r,
+        pl.BlockSpec((Bw, Pmax, bn), lambda b, ki: (0, 0, 0)),
+        pl.BlockSpec((Bw, Rmax, bn), lambda b, ki: (0, 0, 0)),
+    ]
+    operands = [q[:, 0], k_cache, v_cache, pos,
+                idx_i.astype(jnp.int32), idx_j.astype(jnp.int32),
+                idx_r.astype(jnp.int32), kmat, w_res]
+    if has_residual:
+        in_specs.append(pl.BlockSpec((1, n_cols), lambda b, ki: (b, 0)))
+        operands.append(residual)
+    return pl.pallas_call(
+        kernel,
+        name="fused_attn_decode",
+        grid=(B, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, n_cols), lambda b, ki: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_cols), out_dtype),
+        scratch_shapes=[
+            _SCRATCH((KH, G), jnp.float32),
+            _SCRATCH((KH, G), jnp.float32),
+            _SCRATCH((KH, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)

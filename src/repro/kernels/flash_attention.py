@@ -13,6 +13,11 @@ sequential), carrying (m, l, acc) in VMEM scratch across the KV iterations of
 one q-block; q/k/v/o blocks stream per grid step.  Causal skipping happens
 in-kernel via ``pl.when`` (a fully-masked block never touches the MXU).
 GQA is handled in the k/v index maps (query head h reads kv head h·KH//H).
+
+Ragged sequence lengths are handled internally: inputs are zero-padded up to
+the chunk grid, padded *keys* are masked to -inf in-kernel (mirroring
+``layers.flash_attention``'s ``pos_k < Sk`` lane mask), and the output is
+sliced back to the caller's (B, Sq, H, D).
 """
 from __future__ import annotations
 
@@ -23,17 +28,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:  # TPU backend scratch spaces; ANY works in interpret mode too
+try:  # TPU backend scratch spaces
     from jax.experimental.pallas import tpu as pltpu
 
     _SCRATCH = pltpu.VMEM
-except Exception:  # pragma: no cover
-    _SCRATCH = None
+except Exception:  # pragma: no cover - exercised via monkeypatch in tests
+    # Backend-neutral fallback: a MemoryRef in the ANY space is a callable
+    # with the same (shape, dtype) signature as pltpu.VMEM and is accepted
+    # by ``scratch_shapes`` in interpret mode, so the kernels keep working
+    # when the TPU plugin namespace is absent.
+    _SCRATCH = functools.partial(pl.MemoryRef, memory_space=pl.MemorySpace.ANY)
+
+
+def _pad_axis(arr: jax.Array, axis: int, size: int) -> jax.Array:
+    if arr.shape[axis] == size:
+        return arr
+    pads = [(0, 0)] * arr.ndim
+    pads[axis] = (0, size - arr.shape[axis])
+    return jnp.pad(arr, pads)
 
 
 def _flash_fwd_kernel(
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, scale: float, causal: bool, q_chunk: int, k_chunk: int, nk: int
+    *, scale: float, causal: bool, q_chunk: int, k_chunk: int, nk: int,
+    valid_k: int
 ):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -54,10 +72,16 @@ def _flash_fwd_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # (q_chunk, k_chunk)
-        if causal:
-            pos_q = qi * q_chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ragged = valid_k % k_chunk != 0
+        if causal or ragged:
             pos_k = ki * k_chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(pos_k <= pos_q, s, -jnp.inf)
+            ok = jnp.full(s.shape, True)
+            if causal:
+                pos_q = qi * q_chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+                ok &= pos_k <= pos_q
+            if ragged:  # zero-padded key lanes never score
+                ok &= pos_k < valid_k
+            s = jnp.where(ok, s, -jnp.inf)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(-1))
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -89,12 +113,23 @@ def flash_attention_fwd(
     """Fused flash-attention forward. Returns (B, Sq, H, D) in q.dtype."""
     B, Sq, H, D = q.shape
     _, Sk, KH, _ = k.shape
+    if H % KH != 0:
+        raise ValueError(
+            f"GQA requires query heads to divide evenly over kv heads: "
+            f"H={H}, KH={KH}"
+        )
     G = H // KH
     scale = 1.0 / math.sqrt(D)
     q_chunk = min(q_chunk, Sq)
     k_chunk = min(k_chunk, Sk)
-    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, "pad sequences to chunks"
-    nq, nk = Sq // q_chunk, Sk // k_chunk
+    # Ragged lengths: pad up to the chunk grid with zero lanes.  Padded keys
+    # are masked to -inf in-kernel (valid_k); padded query rows compute
+    # finite garbage that the final slice drops.
+    nq, nk = -(-Sq // q_chunk), -(-Sk // k_chunk)
+    Sq_p, Sk_p = nq * q_chunk, nk * k_chunk
+    q = _pad_axis(q, 1, Sq_p)
+    k = _pad_axis(k, 1, Sk_p)
+    v = _pad_axis(v, 1, Sk_p)
 
     # layout: (B, H, S, D) so blocks are (1, 1, chunk, D)
     qt = q.transpose(0, 2, 1, 3)
@@ -104,6 +139,7 @@ def flash_attention_fwd(
     kernel = functools.partial(
         _flash_fwd_kernel,
         scale=scale, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk, nk=nk,
+        valid_k=Sk,
     )
     scratch = [
         _SCRATCH((q_chunk,), jnp.float32),
@@ -119,8 +155,8 @@ def flash_attention_fwd(
             pl.BlockSpec((1, 1, k_chunk, D), lambda b, h, qi, ki, _G=G: (b, h // _G, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, q_chunk, D), lambda b, h, qi, ki: (b, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
     )(qt, kt, vt)
-    return out.transpose(0, 2, 1, 3)
+    return out.transpose(0, 2, 1, 3)[:, :Sq]

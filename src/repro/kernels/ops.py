@@ -618,6 +618,158 @@ def fused_paired_expert_dense(
 
 
 # ---------------------------------------------------------------------------
+# differentiable fused decode attention feeding the paired out-projection
+# ---------------------------------------------------------------------------
+#
+# The decode-attention kernel (kernels.decode_attention) performs the paired
+# out-projection in its flush step, so the attended values never reach HBM.
+# The wrapper below normalizes whatever out-projection metadata the layer has
+# — blocked (B, Pmax) lane lists, structured 1-D lists, or no pairing at all
+# — into the kernel's column-blocked segment form:
+#
+#   * structured metadata lifts to one block of bn = N columns (``[None]`` on
+#     every leaf) — the same layout ``fold_lm_weight`` treats as B == 1;
+#   * an unpaired weight synthesizes a pure-residual block (one zero pair
+#     lane with mask 0, ``resid = arange(K)``) so ``(o[I]-o[J])·kmat`` is
+#     exactly zero and ``o[resid]·w_res == o @ W`` — the zero-lane trick;
+#   * empty pair/residual segments (e.g. r=0 pairs nothing) pad to one zero
+#     lane for the same reason, keeping every kernel operand non-empty.
+
+
+def _attn_outproj_segments(w2: jax.Array, meta: dict | None, pair_block_n: int):
+    """Normalized (idx_i, idx_j, idx_r, kmat, w_res) blocked segments of the
+    out-projection for the fused decode-attention kernel."""
+    K, N = w2.shape
+    if meta is None:
+        idx_i = idx_j = jnp.zeros((1, 1), jnp.int32)
+        idx_r = jnp.arange(K, dtype=jnp.int32)[None]
+        return idx_i, idx_j, idx_r, jnp.zeros((1, 1, N), w2.dtype), w2[None]
+    if meta["I"].ndim == 1:
+        meta = {k: v[None] for k, v in meta.items()}
+        bn = N
+    else:
+        bn = pair_block_n
+        assert bn >= 1, "blocked pairing metadata needs pair_block_n >= 1"
+    kmat, w_res = _lm_blocked_segments(w2, meta, bn)
+    idx_i, idx_j, idx_r = meta["I"], meta["J"], meta["resid"]
+    B = idx_i.shape[0]
+    if idx_i.shape[1] == 0:
+        idx_i = idx_j = jnp.zeros((B, 1), jnp.int32)
+        kmat = jnp.zeros((B, 1, bn), kmat.dtype)
+    if idx_r.shape[1] == 0:
+        idx_r = jnp.zeros((B, 1), jnp.int32)
+        w_res = jnp.zeros((B, 1, bn), w_res.dtype)
+    return idx_i, idx_j, idx_r, kmat, w_res
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_attn_decode_grad(
+    pair_block_n, window, n_sink, k_chunk, interpret, has_meta, has_residual
+):
+    """custom_vjp factory for the fused decode-attention + out-projection op.
+
+    Pallas forward, XLA-reference backward (the same split as the paired
+    GEMMs): the backward differentiates ``decode_attention_ref`` composed
+    with the *folded* dense out-projection equivalent — decode attention is
+    inference-only today, so the VJP exists to keep the op safely
+    differentiable (a grad probe, a perplexity eval) rather than to be a
+    training-speed path.  ``pos`` and the integer metadata get float0
+    cotangents."""
+    from repro.kernels.decode_attention import (
+        decode_attention_ref,
+        fused_decode_attention,
+    )
+
+    def primal(q, k_cache, v_cache, pos, w2, res, meta):
+        N = w2.shape[1]
+        idx_i, idx_j, idx_r, kmat, w_res = _attn_outproj_segments(
+            w2, meta if has_meta else None, pair_block_n
+        )
+        res2 = None if res is None else res.reshape(-1, N)
+        y = fused_decode_attention(
+            q, k_cache, v_cache, pos, idx_i, idx_j, idx_r,
+            kmat.astype(q.dtype), w_res.astype(q.dtype), res2,
+            n_cols=N, window=window, n_sink=n_sink, k_chunk=k_chunk,
+            interpret=True if interpret is None else interpret,
+        )
+        return y[:, None]  # (B, 1, N)
+
+    def ref(q, k_cache, v_cache, pos, w2, res, meta):
+        out = decode_attention_ref(
+            q, k_cache, v_cache, pos, window=window, n_sink=n_sink
+        )
+        wf = fold_lm_weight(w2, meta, pair_block_n) if has_meta else w2
+        o2 = out.reshape(*out.shape[:2], -1)
+        z = jnp.einsum("bsk,kn->bsn", o2, wf.astype(o2.dtype))
+        return z + res.astype(z.dtype) if res is not None else z
+
+    @jax.custom_vjp
+    def f(q, k_cache, v_cache, pos, w2, res, meta):
+        return primal(q, k_cache, v_cache, pos, w2, res, meta)
+
+    def fwd(q, k_cache, v_cache, pos, w2, res, meta):
+        return primal(q, k_cache, v_cache, pos, w2, res, meta), (
+            q, k_cache, v_cache, pos, w2, res, meta
+        )
+
+    def bwd(saved, dy):
+        q, k_cache, v_cache, pos, w2, res, meta = saved
+        _, vjp = jax.vjp(
+            lambda q, kc, vc, w2, res: ref(q, kc, vc, pos, w2, res, meta),
+            q, k_cache, v_cache, w2, res,
+        )
+        dq, dk, dv, dw, dres = vjp(dy)
+        dpos = np.zeros(jnp.shape(pos), jax.dtypes.float0)
+        dmeta = {
+            k: np.zeros(jnp.shape(a), jax.dtypes.float0)
+            if jnp.issubdtype(jnp.result_type(a), jnp.integer)
+            else jnp.zeros_like(a)
+            for k, a in meta.items()
+        }
+        return dq, dk, dv, dpos, dw.astype(w2.dtype), dres, dmeta
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fused_attn_decode(
+    q: jax.Array,  # (B, 1, H, D) one post-rope query row per slot
+    k_cache: jax.Array,  # (B, S, KH, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # (B,) int32
+    w: jax.Array,  # (K=H·D, N) live out-projection weights
+    meta: dict | None = None,  # out-proj pairing metadata (any layout)
+    *,
+    residual: jax.Array | None = None,  # (B, 1, N) fused skip connection
+    pair_block_n: int = 0,
+    window: int = 0,
+    n_sink: int = 0,
+    k_chunk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Differentiable fused decode attention + paired out-projection.
+
+    One Pallas launch per decode step: online-softmax attention over the KV
+    cache with the out-projection (and the sublayer residual) applied in the
+    kernel flush — the attended values never round-trip HBM.  ``meta`` is
+    the out-projection's frozen pairing structure in any of the LM layouts
+    (1-D structured, 2-D blocked with ``pair_block_n``) or ``None`` for an
+    unpaired weight (exact dense projection via a synthesized pure-residual
+    block).  Returns (B, 1, N).
+    """
+    has_meta = meta is not None
+    blocked = has_meta and meta["I"].ndim == 2
+    if blocked and pair_block_n < 1:
+        raise ValueError("blocked pairing metadata needs pair_block_n >= 1")
+    fn = _fused_attn_decode_grad(
+        pair_block_n if blocked else 0, window, n_sink, k_chunk, interpret,
+        has_meta, residual is not None,
+    )
+    return fn(q, k_cache, v_cache, pos, w, residual,
+              dict(meta) if has_meta else {})
+
+
+# ---------------------------------------------------------------------------
 # GEMM policy: route model-layer matmuls through the fused kernels
 # ---------------------------------------------------------------------------
 
@@ -845,6 +997,59 @@ def conv_context(knobs, paired=None):
     return contextlib.nullcontext()
 
 
+@dataclasses.dataclass(frozen=True)
+class AttnPolicy:
+    """Routing for decode attention (``attn="pallas_fused"``).
+
+    When active, :func:`repro.models.layers.attention_decode_block` routes
+    the single-token attention + out-projection through
+    :func:`fused_attn_decode` — one Pallas launch whose flush applies the
+    out-projection's subtractor segments and the sublayer residual in VMEM,
+    so the attended values never round-trip HBM.  ``k_chunk`` is the KV-cache
+    chunk the online softmax streams over.  Prefill paths are unaffected.
+    """
+
+    impl: str = "pallas_fused"
+    k_chunk: int = 128
+    interpret: bool | None = None
+
+
+def current_attn_policy() -> AttnPolicy | None:
+    return getattr(_policy_state, "attn", None)
+
+
+@contextlib.contextmanager
+def pallas_attn(
+    impl: str = "pallas_fused",
+    k_chunk: int = 128,
+    interpret: bool | None = None,
+):
+    """Route single-token decode attention through the fused Pallas kernel.
+
+    Thread-local and trace-time, like :func:`pallas_gemm`; wrap the jit
+    trace of the decode step, not the jit call.
+    """
+    prev = current_attn_policy()
+    _policy_state.attn = AttnPolicy(impl, k_chunk, interpret)
+    try:
+        yield
+    finally:
+        _policy_state.attn = prev
+
+
+def attn_context(knobs):
+    """AttnPolicy context from a PerfKnobs-like object (``attn``/``k_chunk``).
+
+    ``knobs.attn == "pallas_fused"`` activates :func:`pallas_attn` with the
+    knob's KV chunk; anything else is a no-op (the XLA decode-attention
+    einsums + the standalone out-projection GEMM).
+    """
+    impl = getattr(knobs, "attn", "xla")
+    if impl == "pallas_fused":
+        return pallas_attn(impl, k_chunk=getattr(knobs, "k_chunk", 128) or 128)
+    return contextlib.nullcontext()
+
+
 def tile_cache_context(knobs):
     """``knobs.tile_cache`` (a path) installs a persisted TileCache so the
     kernels' tile selection prefers measured winners over the heuristic;
@@ -859,8 +1064,8 @@ def tile_cache_context(knobs):
 @contextlib.contextmanager
 def perf_context(knobs, paired=None):
     """Activate every kernel policy a PerfKnobs asks for (gemm + conv +
-    tile cache)."""
+    attn + tile cache)."""
     with tile_cache_context(knobs), gemm_context(knobs), conv_context(
         knobs, paired=paired
-    ):
+    ), attn_context(knobs):
         yield

@@ -58,6 +58,12 @@ def main() -> None:
                          "artifacts (live-weight kernel path, distinct from "
                          "--paired-rounding's offline weight folding); 0.0 "
                          "is the exact-parity point")
+    ap.add_argument("--attn", choices=("xla", "pallas_fused"), default="xla",
+                    help="decode attention lowering: xla runs the dense "
+                         "reference; pallas_fused runs the single-token "
+                         "Pallas decode-attention kernel whose attended "
+                         "output feeds the paired out-projection epilogue "
+                         "directly (one fewer HBM writeback per layer)")
     ap.add_argument("--conv", choices=CONV_IMPLS, default="xla",
                     help="conv lowering for conv-bearing models: plain "
                          "lax.conv, im2col patch GEMM, or the paired "
@@ -112,7 +118,8 @@ def main() -> None:
               f"power −{100*s['power_saving']:.1f}%, area −{100*s['area_saving']:.1f}%")
 
     knobs = M.PerfKnobs(q_chunk=32, k_chunk=32, remat="none",
-                        gemm=args.gemm, conv=args.conv, block_k=args.block_k,
+                        gemm=args.gemm, attn=args.attn, conv=args.conv,
+                        block_k=args.block_k,
                         fuse_pool=args.fuse_pool, tile_cache=args.tile_cache,
                         pair_block_n=args.pair_block_n,
                         pair_rounding=args.pair_rounding)

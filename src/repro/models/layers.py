@@ -341,6 +341,22 @@ def init_attention(cfg: ModelConfig, key) -> dict:
     return p
 
 
+def _qkv_post(cfg: ModelConfig, p: dict, q, k, v, positions: jax.Array):
+    """Bias / qk-norm / rope applied to freshly projected (…, heads, hd)."""
+    cdt = q.dtype
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
 def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
     cdt = x.dtype
     d = x.shape[-1]
@@ -356,17 +372,51 @@ def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
         return y.reshape(*x.shape[:-1], heads, hd)
 
     q, k, v = proj("wq"), proj("wk"), proj("wv")
-    if cfg.qkv_bias:
-        q = q + p["bq"].astype(cdt)
-        k = k + p["bk"].astype(cdt)
-        v = v + p["bv"].astype(cdt)
-    if cfg.qk_norm:
-        q = rms_head_norm(p["q_norm"], q)
-        k = rms_head_norm(p["k_norm"], k)
-    if cfg.rope_theta:
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
-    return q, k, v
+    return _qkv_post(cfg, p, q, k, v, positions)
+
+
+def _fused_qkv_proj(p: dict, x: jax.Array, ppol):
+    """All three QKV projections as ONE subtractor launch, when possible.
+
+    The q/k/v weights concatenate along their output columns and their
+    *blocked* pairing metadata concatenates along the block axis (lane lists
+    pad to a common Pmax/Rmax with masked zero lanes — exact, the zero-lane
+    trick), so a single :func:`repro.kernels.ops.fused_paired_dense` call
+    projects all three.  Requires every weight to carry 2-D blocked metadata
+    and the block size to divide the wq/wv column counts so block boundaries
+    stay on weight boundaries (always true per-column, ``pair_block_n=1``).
+    Returns ``(q, k, v)`` shaped ``(…, heads, hd)`` or None when the layout
+    doesn't allow the concatenation (caller falls back to per-weight calls).
+    """
+    names = ("wq", "wk", "wv")
+    metas = [p.get(n + "_pairing") for n in names]
+    if any(m is None or m["I"].ndim != 2 for m in metas):
+        return None
+    bn = ppol.pair_block_n
+    d = x.shape[-1]
+    ws = [p[n].astype(x.dtype).reshape(d, -1) for n in names]
+    ns = [w.shape[1] for w in ws]
+    if bn < 1 or ns[0] % bn or ns[1] % bn:
+        return None
+    pmax = max(m["I"].shape[1] for m in metas)
+    rmax = max(m["resid"].shape[1] for m in metas)
+    pad = lambda a, n: jnp.pad(a, ((0, 0), (0, n - a.shape[1])))
+    meta = {
+        key: jnp.concatenate(
+            [pad(m[key], pmax if key in ("I", "J", "pair_mask") else rmax)
+             for m in metas], axis=0)
+        for key in ("I", "J", "pair_mask", "resid", "resid_mask")
+    }
+    from repro.kernels import ops as kops
+
+    y = kops.fused_paired_dense(
+        x, jnp.concatenate(ws, axis=1), meta,
+        pair_block_n=bn, block_m=ppol.block_m, block_n=ppol.block_n,
+        block_k=ppol.block_k, interpret=ppol.interpret,
+    )
+    yq, yk, yv = jnp.split(y, [ns[0], ns[0] + ns[1]], axis=-1)
+    shape = lambda arr, n: arr.reshape(*x.shape[:-1], *p[n].shape[-2:])
+    return shape(yq, "wq"), shape(yk, "wk"), shape(yv, "wv")
 
 
 def attn_out_proj(p: dict, out: jax.Array,
@@ -422,13 +472,44 @@ def attention_decode_block(
     n_sink: int = 0,
     residual: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
-    q, k, v = _qkv(cfg, p, x, pos[:, None])
+    from repro.kernels import ops as kops
+
+    apol = kops.current_attn_policy()
+    if apol is None or x.shape[1] != 1:
+        q, k, v = _qkv(cfg, p, x, pos[:, None])
+        B = x.shape[0]
+        bidx = jnp.arange(B)
+        k_cache = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
+        out = decode_attention(q, k_cache, v_cache, pos, window=window, n_sink=n_sink)
+        y = attn_out_proj(p, out, residual=residual)
+        return y, {"k": k_cache, "v": v_cache}
+
+    # fused decode path (PerfKnobs(attn="pallas_fused")): one subtractor
+    # launch projects q|k|v together when the blocked metadata concatenates,
+    # then one kernel runs attention + the paired out-projection + the
+    # sublayer residual — the attended values never round-trip HBM between
+    # the attention and the out-projection (kernels/decode_attention.py).
+    ppol = kops.current_paired_gemm_policy()
+    qkv = _fused_qkv_proj(p, x, ppol) if ppol is not None else None
+    if qkv is None:
+        q, k, v = _qkv(cfg, p, x, pos[:, None])
+    else:
+        q, k, v = _qkv_post(cfg, p, *qkv, pos[:, None])
     B = x.shape[0]
     bidx = jnp.arange(B)
     k_cache = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
     v_cache = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
-    out = decode_attention(q, k_cache, v_cache, pos, window=window, n_sink=n_sink)
-    y = attn_out_proj(p, out, residual=residual)
+    wo = p["wo"].astype(x.dtype)
+    H, hd, d = wo.shape
+    meta = p.get("wo_pairing") if ppol is not None else None
+    y = kops.fused_attn_decode(
+        q, k_cache, v_cache, pos, wo.reshape(H * hd, d), meta,
+        residual=residual,
+        pair_block_n=ppol.pair_block_n if ppol is not None else 0,
+        window=window, n_sink=n_sink,
+        k_chunk=apol.k_chunk, interpret=apol.interpret,
+    )
     return y, {"k": k_cache, "v": v_cache}
 
 

@@ -63,6 +63,13 @@ class PerfKnobs:
     fuse_pool: bool = False  # conv→pool megakernel: absorb the 2×2 max-pool
     # into the paired-conv epilogue (pallas_paired only; one HBM writeback
     # per conv layer, no standalone pooling op in the schedule)
+    attn: str = "xla"  # "xla" | "pallas_fused" — decode-attention lowering:
+    # "pallas_fused" routes attention_decode_block through the fused Pallas
+    # kernel (kernels.decode_attention): the single-token online softmax
+    # runs in VMEM scratch and the paired out-projection + sublayer residual
+    # execute in the kernel flush, so the attended values never round-trip
+    # HBM; with pair_block_n >= 1 the q|k|v projections additionally
+    # concatenate into one subtractor launch.  Prefill is unaffected.
     pair_block_n: int = 0  # pairing-mode spectrum for the subtractor paths:
     # 0 → structured (one shared-row pairing across all output channels);
     # n >= 1 → column-blocked (one pairing per n output channels, executed
@@ -277,7 +284,8 @@ def layer_fwd(
             )
         if kind == "encdec":
             xq = L.apply_norm(p["lnx"], h)
-            h = h + _cross_attention(cfg, p["xattn"], xq, enc_out, knobs)
+            # skip connection rides the paired out-projection epilogue
+            h = _cross_attention(cfg, p["xattn"], xq, enc_out, knobs, residual=h)
 
     if "mlp" in p or "moe" in p:
         x2 = L.apply_norm(p["ln2"], h)
@@ -343,13 +351,26 @@ def _mla_with_cache(cfg, p, x, positions, knobs):
     return y, {"c_kv": c_kv_c, "k_rope": k_rope_c}
 
 
-def _cross_attention(cfg, p, xq, enc_out, knobs):
+def _xattn_q(p, xq):
+    """Cross-attention query projection through `layers.dense` so the wq
+    pairing metadata (configs with xattn paired_leaves) reaches the
+    subtractor kernel — the k/v projections run over the *encoder* output
+    once at prefill and stay plain einsums."""
     cdt = xq.dtype
-    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    d = xq.shape[-1]
+    w = p["wq"].astype(cdt)
+    h, hd = w.shape[-2:]
+    q = L.dense(xq, w.reshape(d, h * hd), pairing=p.get("wq_pairing"))
+    return q.reshape(*xq.shape[:-1], h, hd)
+
+
+def _cross_attention(cfg, p, xq, enc_out, knobs, residual=None):
+    cdt = xq.dtype
+    q = _xattn_q(p, xq)
     k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(cdt))
     v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(cdt))
     out = L.flash_attention(q, k, v, causal=False, q_chunk=knobs.q_chunk, k_chunk=knobs.k_chunk)
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return L.attn_out_proj(p, out, residual=residual)
 
 
 def _ssm_with_cache(cfg, p, x, collect_cache):
@@ -746,14 +767,16 @@ def layer_decode(
             c_out.update(attn_c)
         if kind == "encdec":
             xq = L.apply_norm(p["lnx"], h)
-            # cross attention against the precomputed encoder K/V
-            cdt = h.dtype
-            q = jnp.einsum("bsd,dhk->bshk", xq, p["xattn"]["wq"].astype(cdt))
+            # cross attention against the precomputed encoder K/V; the wq/wo
+            # projections route through layers.dense so the xattn pairing
+            # metadata reaches the subtractor kernel, with the skip
+            # connection fused into the out-projection epilogue
+            q = _xattn_q(p["xattn"], xq)
             out = L.decode_attention(
                 q, c["xk"], c["xv"],
                 jnp.full((h.shape[0],), c["xk"].shape[1] - 1, jnp.int32),
             )
-            h = h + jnp.einsum("bshk,hkd->bsd", out, p["xattn"]["wo"].astype(cdt))
+            h = L.attn_out_proj(p["xattn"], out, residual=h)
 
     if "mlp" in p or "moe" in p:
         x2 = L.apply_norm(p["ln2"], h)

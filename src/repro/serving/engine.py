@@ -54,6 +54,22 @@ class ServeEngine:
     rules: object = None
 
     def __post_init__(self):
+        # attn == "pallas_fused" routes single-token decode attention through
+        # the Pallas decode-attention kernel whose attended output feeds the
+        # paired out-projection epilogue in VMEM (kernels.decode_attention) —
+        # one fewer HBM writeback per decoder layer.  Validate here rather
+        # than letting attn_context silently fall back to the dense path on a
+        # typo'd knob.
+        if self.knobs.attn not in ("xla", "pallas_fused"):
+            raise ValueError(
+                f"unknown knobs.attn {self.knobs.attn!r} "
+                "(expected 'xla' or 'pallas_fused')")
+        if self.mesh is not None and self.knobs.attn != "xla":
+            raise NotImplementedError(
+                "attn='pallas_fused' is single-host only: the sharded serve "
+                "cell decodes against a sequence-sharded cache, and the fused "
+                "decode-attention kernel has no cross-shard softmax yet — "
+                "the mesh path keeps the dense decode attention")
         cache_tree = M.init_cache(self.cfg, self.batch_size, self.max_seq)
         self.cache, _ = unzip(cache_tree)
         self.pos = jnp.zeros((self.batch_size,), jnp.int32)

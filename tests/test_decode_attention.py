@@ -1,0 +1,204 @@
+"""Fused decode attention feeding the paired out-projection.
+
+Covers the op (``kernels.ops.fused_attn_decode``: one Pallas launch for
+attention + subtractor out-projection + residual epilogue) against the
+unfused XLA schedule at every metadata layout, its custom VJP, and the
+``PerfKnobs(attn="pallas_fused")`` serving path end to end: token parity of
+a fused-attention ServeEngine vs the XLA engine on dense, sliding-window +
+sink (hymba), and enc-dec cross-attention (whisper) families.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.pairing import pair_rows_blocked
+from repro.core.transform import _stack_blocked
+from repro.kernels.ops import fold_lm_weight, fused_attn_decode
+from repro.models import layers as L
+from repro.models import lm as M
+from repro.models.param import unzip
+from repro.serving.engine import ServeEngine
+
+
+def _blocked_meta(w2: np.ndarray, rounding: float, block_n: int) -> dict:
+    """Single-layer column-blocked metadata in the stacked-artifact layout."""
+    bp = pair_rows_blocked(np.asarray(w2, np.float64), rounding, block_n)
+    stacked = _stack_blocked([bp])
+    return {k: jnp.asarray(v[0]) for k, v in stacked.items()}
+
+
+def _inputs(seed=0, B=2, S=16, H=4, KH=2, D=8):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    pos = jnp.asarray([3, S - 1], jnp.int32)
+    return rng, q, kc, vc, pos
+
+
+def _unfused(q, kc, vc, pos, wf, res=None, **mask_kw):
+    """The schedule the kernel replaces: dense attention, HBM round-trip,
+    separate (folded-weight) projection, standalone residual add."""
+    out = L.decode_attention(q, kc, vc, pos, **mask_kw)
+    y = jnp.einsum("bsk,kn->bsn", out.reshape(*out.shape[:2], -1), wf)
+    return y + res if res is not None else y
+
+
+# ---------------------------------------------------------------------------
+# op level
+# ---------------------------------------------------------------------------
+
+
+def test_unpaired_matches_dense_projection():
+    """meta=None: the synthesized pure-residual block is the exact dense
+    out-projection, residual epilogue included."""
+    rng, q, kc, vc, pos = _inputs(0)
+    w = jnp.asarray(rng.normal(size=(32, 12)), jnp.float32)  # (H·D, N)
+    res = jnp.asarray(rng.normal(size=(2, 1, 12)), jnp.float32)
+    got = fused_attn_decode(q, kc, vc, pos, w, residual=res, k_chunk=8)
+    want = _unfused(q, kc, vc, pos, w, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_n", [1, 4])
+def test_paired_r0_matches_dense_projection(block_n):
+    """Blocked pairing at rounding 0: the subtractor segments reconstruct
+    the exact weight, so the fused op == the unfused dense schedule."""
+    rng, q, kc, vc, pos = _inputs(1)
+    w = jnp.asarray(rng.normal(size=(32, 12)), jnp.float32)
+    meta = _blocked_meta(np.asarray(w), 0.0, block_n)
+    res = jnp.asarray(rng.normal(size=(2, 1, 12)), jnp.float32)
+    got = fused_attn_decode(q, kc, vc, pos, w, meta, residual=res,
+                            pair_block_n=block_n, k_chunk=8)
+    want = _unfused(q, kc, vc, pos, w, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paired_rounded_matches_folded_oracle():
+    """r > 0: the kernel executes the snapped pair magnitudes — it must
+    match the folded-weight oracle exactly, not the original weight."""
+    rng, q, kc, vc, pos = _inputs(2)
+    w = jnp.asarray(rng.normal(size=(32, 12)), jnp.float32)
+    meta = _blocked_meta(np.asarray(w), 0.3, 1)
+    assert float(meta["pair_mask"].sum()) > 0, "rounding 0.3 must pair lanes"
+    wf = fold_lm_weight(w, meta, pair_block_n=1)
+    assert not np.allclose(np.asarray(wf), np.asarray(w))
+    got = fused_attn_decode(q, kc, vc, pos, w, meta, pair_block_n=1, k_chunk=8)
+    want = _unfused(q, kc, vc, pos, wf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_window_and_sink_masking():
+    """Sliding window + sinks flow through to the in-kernel mask (the
+    hybrid_swa decode semantics of ``layers._block_mask``)."""
+    rng, q, kc, vc, pos = _inputs(3, S=24)
+    w = jnp.asarray(rng.normal(size=(32, 12)), jnp.float32)
+    for window, n_sink in ((6, 0), (6, 2)):
+        got = fused_attn_decode(q, kc, vc, pos, w, window=window,
+                                n_sink=n_sink, k_chunk=8)
+        want = _unfused(q, kc, vc, pos, w, window=window, n_sink=n_sink)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_custom_vjp_matches_xla_grads():
+    """The Pallas-forward / XLA-backward split: grads wrt q, cache, weight
+    and residual match differentiating the unfused reference."""
+    rng, q, kc, vc, pos = _inputs(4)
+    w = jnp.asarray(rng.normal(size=(32, 12)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(2, 1, 12)), jnp.float32)
+    meta = _blocked_meta(np.asarray(w), 0.0, 1)
+
+    def loss(q, w, res, fused):
+        if fused:
+            y = fused_attn_decode(q, kc, vc, pos, w, meta, residual=res,
+                                  pair_block_n=1, k_chunk=8)
+        else:
+            y = _unfused(q, kc, vc, pos, w, res)
+        return (y * y).sum()
+
+    gk = jax.grad(loss, argnums=(0, 1, 2))(q, w, res, True)
+    gx = jax.grad(loss, argnums=(0, 1, 2))(q, w, res, False)
+    for a, b in zip(gk, gx, strict=True):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_meta_requires_pair_block_n():
+    rng, q, kc, vc, pos = _inputs(5)
+    w = jnp.asarray(rng.normal(size=(32, 12)), jnp.float32)
+    meta = _blocked_meta(np.asarray(w), 0.0, 1)
+    with pytest.raises(ValueError, match="pair_block_n"):
+        fused_attn_decode(q, kc, vc, pos, w, meta)
+
+
+# ---------------------------------------------------------------------------
+# serving path: PerfKnobs(attn="pallas_fused") end to end
+# ---------------------------------------------------------------------------
+
+
+def _engine_pair(arch, knobs_extra, max_seq=32):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    base = dict(q_chunk=16, k_chunk=16, remat="none")
+    eng_x = ServeEngine(cfg, params, max_seq=max_seq, batch_size=2,
+                        knobs=M.PerfKnobs(**base))
+    eng_f = ServeEngine(cfg, params, max_seq=max_seq, batch_size=2,
+                        knobs=M.PerfKnobs(**base, attn="pallas_fused",
+                                          **knobs_extra))
+    return cfg, eng_x, eng_f
+
+
+@pytest.mark.parametrize("arch,knobs_extra", [
+    # plain dense GQA; fused attention alone (no paired GEMMs)
+    ("qwen2-1.5b", {}),
+    # the full fused decode schedule: paired QKV + attn→out-proj epilogue
+    ("qwen2-1.5b", dict(gemm="pallas_paired", pair_rounding=0.0,
+                        pair_block_n=1)),
+    # sliding-window + meta-token sinks through the fused mask
+    ("hymba-1.5b", {}),
+])
+def test_fused_engine_token_parity(arch, knobs_extra):
+    cfg, eng_x, eng_f = _engine_pair(arch, knobs_extra)
+    rng = np.random.default_rng(0)
+    prompts = {
+        0: rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
+        1: rng.integers(0, cfg.vocab, size=(11,)).astype(np.int32),
+    }
+    steps = 3
+    out_x = eng_x.generate(dict(prompts), steps)
+    out_f = eng_f.generate(dict(prompts), steps)
+    assert out_f == out_x, f"fused attn diverged on {arch}: {out_f} vs {out_x}"
+
+
+def test_fused_engine_token_parity_encdec():
+    """Whisper: the cross-attention q/out-proj now ride ``layers.dense``
+    (paired path) and self-attention decode rides the fused kernel."""
+    cfg, eng_x, eng_f = _engine_pair("whisper-base", {})
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(
+        rng.normal(size=(1, cfg.encoder.frames, cfg.d_model)), jnp.float32)
+    prompts = {0: rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+               1: rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)}
+    steps = 3
+    out_x = eng_x.generate(dict(prompts), steps, extras={"frames": frames})
+    out_f = eng_f.generate(dict(prompts), steps, extras={"frames": frames})
+    assert out_f == out_x, f"fused attn diverged on encdec: {out_f} vs {out_x}"
+
+
+def test_engine_rejects_bad_attn_knob():
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"), dtype="float32")
+    params, _ = unzip(M.init_lm(cfg, jax.random.key(0)))
+    with pytest.raises(ValueError, match="knobs.attn"):
+        ServeEngine(cfg, params, max_seq=16, batch_size=1,
+                    knobs=M.PerfKnobs(attn="fused"))
+    with pytest.raises(NotImplementedError, match="single-host"):
+        ServeEngine(cfg, params, max_seq=16, batch_size=1,
+                    knobs=M.PerfKnobs(attn="pallas_fused"), mesh=object())

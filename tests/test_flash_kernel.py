@@ -1,10 +1,16 @@
 """Pallas flash-attention kernel vs the pure-jnp blocked reference."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.experimental import pallas as pl
 
+from repro.kernels import decode_attention as da
+from repro.kernels import flash_attention as fa
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.models import layers as L
 from repro.models.layers import flash_attention
 
 
@@ -52,6 +58,93 @@ def test_flash_kernel_matches_model_flash_path():
     got = flash_attention_fwd(q, k, v, causal=True, q_chunk=16, k_chunk=16)
     want = flash_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("Sq,Sk", [(37, 53), (17, 64), (64, 21)])
+def test_flash_kernel_ragged_lengths(Sq, Sk, causal):
+    """Lengths the chunk grid does not divide: the kernel pads internally,
+    masks the padded key lanes, and slices the output back — no assert on
+    ``Sq % q_chunk`` left to vanish under ``python -O``."""
+    rng = np.random.default_rng(Sq * 100 + Sk)
+    q = jnp.asarray(rng.normal(size=(2, Sq, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, Sk, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, Sk, 2, 16)), jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=causal, q_chunk=16, k_chunk=16)
+    want = _mha_ref(q, k, v, causal)
+    assert got.shape == want.shape
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_scratch_fallback_memref(monkeypatch):
+    """The backend-neutral ``_SCRATCH`` fallback (taken when the pltpu
+    namespace is absent) must actually work as a ``scratch_shapes`` entry —
+    the old ``None`` sentinel TypeError'd on first kernel call."""
+    fallback = functools.partial(pl.MemoryRef, memory_space=pl.MemorySpace.ANY)
+    monkeypatch.setattr(fa, "_SCRATCH", fallback)
+    monkeypatch.setattr(da, "_SCRATCH", fallback)
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.float32)
+    got = fa.flash_attention_fwd(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_mha_ref(q, k, v, True)),
+                               rtol=2e-4, atol=2e-4)
+    qd = jnp.asarray(rng.normal(size=(2, 1, 4, 16)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(2, 16, 2, 16)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 16, 2, 16)), jnp.float32)
+    pos = jnp.asarray([5, 11], jnp.int32)
+    got_d = da.decode_attention_fwd(qd, kc, vc, pos, k_chunk=8)
+    want_d = L.decode_attention(qd, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_non_divisible_heads_raise():
+    """H % KH != 0 is a loud ValueError, not a silent index-map wraparound."""
+    q = jnp.zeros((1, 8, 3, 8), jnp.float32)
+    kv = jnp.zeros((1, 8, 2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="divide evenly"):
+        flash_attention_fwd(q, kv, kv, q_chunk=8, k_chunk=8)
+    qd = jnp.zeros((1, 1, 3, 8), jnp.float32)
+    with pytest.raises(ValueError, match="divide evenly"):
+        da.decode_attention_fwd(qd, kv, kv, jnp.zeros((1,), jnp.int32))
+
+
+@pytest.mark.parametrize("window,n_sink", [(0, 0), (6, 0), (6, 2)])
+@pytest.mark.parametrize("S,k_chunk", [(8, 8), (24, 8), (33, 16)])
+def test_decode_kernel_matches_layers_decode(S, k_chunk, window, n_sink):
+    """Bare fused decode kernel vs ``layers.decode_attention`` across cache
+    lengths (incl. ragged S), slot positions, sliding windows and sinks."""
+    rng = np.random.default_rng(S * 10 + window + n_sink)
+    B, H, KH, D = 3, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    pos = jnp.asarray([0, S // 2, S - 1], jnp.int32)
+    got = da.decode_attention_fwd(q, kc, vc, pos, window=window,
+                                  n_sink=n_sink, k_chunk=k_chunk)
+    want = L.decode_attention(q, kc, vc, pos, window=window, n_sink=n_sink)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kernel_fully_masked_slot_is_finite_zero():
+    """A slot whose mask admits no keys (pos = -1: a fresh/inactive batch
+    lane) must flush exact zeros, not NaN from an all--inf softmax row."""
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(2, 1, 4, 8)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(2, 16, 2, 8)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 16, 2, 8)), jnp.float32)
+    pos = jnp.asarray([-1, 7], jnp.int32)
+    got = np.asarray(da.decode_attention_fwd(q, kc, vc, pos, k_chunk=8))
+    assert np.isfinite(got).all()
+    np.testing.assert_array_equal(got[0], 0.0)
+    want = L.decode_attention(q[1:], kc[1:], vc[1:], pos[1:])
+    np.testing.assert_allclose(got[1:], np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
 def test_flash_kernel_bf16():
